@@ -1,0 +1,31 @@
+"""Shared benchmark utilities."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+
+def timed(fn, *args, repeats: int = 1, warmup: int = 0, **kwargs):
+    """Wall-time a jax-returning callable (blocks on the result).
+
+    warmup defaults to 0 on this single-core container (timings include
+    one-time jit compilation; relative algorithm ratios remain valid and
+    are the paper's own metric)."""
+    out = None
+    for _ in range(warmup):
+        out = fn(*args, **kwargs)
+        jax.block_until_ready(out)
+    times = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        out = fn(*args, **kwargs)
+        jax.block_until_ready(out)
+        times.append(time.perf_counter() - t0)
+    return float(np.median(times)), out
+
+
+def csv_row(name: str, seconds: float, derived: str = "") -> str:
+    return f"{name},{seconds * 1e6:.1f},{derived}"

@@ -1,0 +1,90 @@
+"""Paper Fig 4: strong scaling of the enhanced algorithms vs machine
+count on musae-facebook.
+
+On this 1-core container wall-time cannot show real parallel speedup, so
+this benchmark reports BOTH:
+  * measured wall time per simulated device count (subprocess per count,
+    XLA_FLAGS host-device override) — sanity that the sharded program
+    runs at every mesh size, and
+  * the work-based strong-scaling curve (max per-device pair-comparison
+    count from the strip decomposition) — the quantity the paper's Fig 4
+    slope reflects; near-linear until per-device strip quota ~ 1.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import subprocess
+import sys
+
+import numpy as np
+
+_CHILD = r"""
+import os, sys, time
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=%d"
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import AxisType
+from repro.core import grid as gridlib
+from repro.distributed.gridded import sharded_reversal_stats
+from repro.graphs.datasets import paper_graph
+from repro.graphs.layouts import random_layout
+
+n_dev = %d
+mesh = jax.make_mesh((n_dev,), ("data",), axis_types=(AxisType.Auto,))
+edges_np, n_v = paper_graph("musae-facebook", seed=0, scale=%f)
+pos = jnp.asarray(random_layout(n_v, seed=1))
+edges = jnp.asarray(edges_np)
+segs = gridlib.build_strip_segments(pos, edges, 512, 1 << 20)
+buckets = gridlib.bucketize_segments(segs, 512, cap=%d)
+# warmup + timed
+(c,) = sharded_reversal_stats(mesh, buckets)
+t0 = time.perf_counter()
+for _ in range(3):
+    (c,) = sharded_reversal_stats(mesh, buckets)
+    jax.block_until_ready(c)
+print("RESULT", n_dev, (time.perf_counter() - t0) / 3, int(c))
+"""
+
+
+def run(device_counts=(1, 2, 4, 8), scale: float = 0.2, cap: int = 512):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    rows = []
+    for n in device_counts:
+        script = _CHILD % (n, n, scale, cap)
+        res = subprocess.run([sys.executable, "-c", script], env=env,
+                             capture_output=True, text=True, timeout=900)
+        line = [ln for ln in res.stdout.splitlines()
+                if ln.startswith("RESULT")]
+        if not line:
+            rows.append(dict(devices=n, seconds=float("nan"),
+                             error=res.stderr[-300:]))
+            continue
+        _, n_dev, sec, count = line[0].split()
+        # work model: strips round-robin over devices
+        n_strips = 512
+        per_dev_strips = -(-n_strips // n)
+        rows.append(dict(devices=n, seconds=float(sec), count=int(count),
+                         work_frac=per_dev_strips / n_strips))
+    return rows
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scale", type=float, default=0.2)
+    args = ap.parse_args(argv)
+    rows = run(scale=args.scale)
+    print("devices,seconds,count,per_device_work_fraction,ideal_speedup")
+    base = rows[0]["work_frac"] if rows else 1.0
+    for r in rows:
+        print(f"{r['devices']},{r.get('seconds', float('nan')):.4f},"
+              f"{r.get('count', '')},{r.get('work_frac', '')},"
+              f"{base / r['work_frac']:.2f}" if "work_frac" in r else "")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

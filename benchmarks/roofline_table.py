@@ -1,0 +1,64 @@
+import os
+if "XLA_FLAGS" not in os.environ:
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=256"
+
+"""Roofline baseline table: all (arch x shape) cells on the single-pod
+16x16 mesh (EXPERIMENTS.md SRoofline).
+
+  PYTHONPATH=src python -m benchmarks.roofline_table [--arch X] \
+      [--out roofline_baseline.json]
+
+The 256-placeholder-device override above must precede any jax import.
+"""
+
+import argparse
+import json
+import time
+import traceback
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--cell", default=None)
+    ap.add_argument("--out", default="roofline_baseline.json")
+    args = ap.parse_args(argv)
+
+    import jax
+    from repro.configs import all_cells
+    from repro.configs.readability import READABILITY_SHAPES
+    from repro.launch.mesh import make_production_mesh
+    from repro.roofline.analysis import HEADER, analyze_cell
+
+    assert len(jax.devices()) >= 256
+    mesh = make_production_mesh(multi_pod=False)
+
+    cells = [(a, s) for a, s, _ in all_cells()]
+    cells += [("readability", s) for s in READABILITY_SHAPES]
+    if args.arch:
+        cells = [(a, s) for a, s in cells if a == args.arch]
+    if args.cell:
+        a, s = args.cell.split(":")
+        cells = [(a, s)]
+
+    rows = []
+    print(HEADER)
+    for arch_id, shape_id in cells:
+        t0 = time.time()
+        try:
+            terms = analyze_cell(arch_id, shape_id, mesh, "pod16x16")
+            rows.append(terms.__dict__)
+            print(terms.row(), f"<!-- {time.time() - t0:.0f}s -->")
+        except Exception as e:  # noqa: BLE001
+            traceback.print_exc()
+            rows.append({"arch": arch_id, "shape": shape_id,
+                         "error": str(e)})
+            print(f"| {arch_id} | {shape_id} | ERROR {e} |")
+    with open(args.out, "w") as f:
+        json.dump(rows, f, indent=1)
+    print(f"-> {args.out}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

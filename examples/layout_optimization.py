@@ -1,0 +1,65 @@
+"""End-to-end driver: readability-in-the-loop layout optimization.
+
+The paper's concluding application: generating layouts while *measuring*
+their readability cheaply enough to steer the process. This driver runs
+Fruchterman-Reingold (JAX, blocked O(V^2) repulsion) for a few hundred
+iterations and evaluates the five readability metrics with the enhanced
+algorithms at every checkpoint — picking the most readable snapshot.
+
+  PYTHONPATH=src python examples/layout_optimization.py --n 400 --iters 200
+"""
+
+import argparse
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import evaluate_layout
+from repro.graphs.datasets import random_edges
+from repro.graphs.layouts import fruchterman_reingold, random_layout
+
+
+def readability_score(report):
+    """Scalar score: fewer crossings/occlusions, better angles."""
+    return (report.minimum_angle + report.edge_crossing_angle
+            - np.log1p(report.edge_crossing) / 10.0
+            - np.log1p(report.node_occlusion) / 10.0)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n", type=int, default=400)
+    ap.add_argument("--edges", type=int, default=800)
+    ap.add_argument("--iters", type=int, default=200)
+    ap.add_argument("--check-every", type=int, default=40)
+    args = ap.parse_args()
+
+    edges = random_edges(args.n, args.edges, seed=0)
+    pos = jnp.asarray(random_layout(args.n, seed=0))
+    edges_j = jnp.asarray(edges)
+
+    best = (None, -np.inf, -1)
+    t0 = time.time()
+    done = 0
+    while done < args.iters:
+        pos = fruchterman_reingold(pos, edges_j,
+                                   n_iter=args.check_every, block=256)
+        done += args.check_every
+        report = evaluate_layout(np.asarray(pos), edges, method="enhanced",
+                                 n_strips=256)
+        score = readability_score(report)
+        print(f"iter {done:4d}: E_c={report.edge_crossing:6d} "
+              f"N_c={report.node_occlusion:5d} "
+              f"M_a={report.minimum_angle:.3f} "
+              f"E_ca={report.edge_crossing_angle:.3f} score={score:+.3f}")
+        if score > best[1]:
+            best = (np.asarray(pos).copy(), score, done)
+    print(f"best layout at iter {best[2]} (score {best[1]:+.3f}); "
+          f"total {time.time() - t0:.1f}s")
+    np.save("best_layout.npy", best[0])
+    print("saved -> best_layout.npy")
+
+
+if __name__ == "__main__":
+    main()

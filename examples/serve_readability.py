@@ -1,0 +1,9 @@
+"""Serve batched readability-evaluation requests (the paper's system as a
+service): shape-bucketed, jit-cached, enhanced algorithms by default.
+
+  PYTHONPATH=src python examples/serve_readability.py
+"""
+
+from repro.launch.serve import main as serve_main
+
+serve_main(["--requests", "6", "--method", "enhanced"])

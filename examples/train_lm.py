@@ -1,0 +1,26 @@
+"""Train a reduced LM for a few hundred steps with fault-tolerant
+checkpointing (kill it mid-run and re-launch: it resumes).
+
+  PYTHONPATH=src python examples/train_lm.py
+"""
+
+import tempfile
+
+from repro.launch.train import main as train_main
+
+ckpt_dir = tempfile.mkdtemp(prefix="repro_lm_ckpt_")
+print(f"checkpoints -> {ckpt_dir}")
+
+losses = train_main([
+    "--arch", "qwen3-4b", "--smoke",
+    "--steps", "200",
+    "--batch", "8",
+    "--seq", "64",
+    "--lr", "3e-3",
+    "--checkpoint-dir", ckpt_dir,
+    "--checkpoint-every", "50",
+])
+
+assert losses[-1] < losses[0], "loss did not decrease"
+print(f"loss decreased {losses[0]:.3f} -> {losses[-1]:.3f} over "
+      f"{len(losses)} steps")

@@ -1,0 +1,19 @@
+"""The paper's own workloads: readability evaluation over the six SNAP
+datasets (Table 1), as dry-runnable cells on the production mesh.
+
+Shapes (per dataset size; soc-Epinions1 is the biggest and the one used
+for the paper-representative roofline/hillclimb cell):
+  * ``exact_occlusion``  — row-sharded O(V^2) sweep (S3.1.1)
+  * ``exact_crossing``   — row-sharded O(E^2) CCW sweep (S3.1.4)
+  * ``enhanced_crossing``— strip-sharded reversal counting (S3.2.2)
+"""
+
+from repro.graphs.datasets import PAPER_DATASETS
+
+READABILITY_SHAPES = ("exact_occlusion", "exact_crossing",
+                      "enhanced_crossing")
+DEFAULT_DATASET = "soc-Epinions1"
+
+
+def dataset_dims(name: str = DEFAULT_DATASET):
+    return PAPER_DATASETS[name]

@@ -1,0 +1,15 @@
+# The paper's primary contribution: distributed readability evaluation for
+# 2-D graph layouts — five metrics, exact (all-pairs) and enhanced
+# (grid/strip divide-and-conquer) algorithms, TPU-adapted (DESIGN.md S2).
+from repro.core.crossing import (count_crossings_enhanced,  # noqa: F401
+                                 count_crossings_exact, count_crossings_strips)
+from repro.core.crossing_angle import (crossing_angle_enhanced,  # noqa: F401
+                                       crossing_angle_exact,
+                                       crossing_angle_strips)
+from repro.core.edge_length import edge_length_variation  # noqa: F401
+from repro.core.metrics import (ALL_METRICS, ReadabilityReport,  # noqa: F401
+                                evaluate_layout)
+from repro.core.min_angle import minimum_angle  # noqa: F401
+from repro.core.occlusion import (count_occlusions_enhanced,  # noqa: F401
+                                  count_occlusions_exact,
+                                  count_occlusions_gridded)

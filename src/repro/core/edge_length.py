@@ -1,0 +1,26 @@
+"""Edge length variation ``M_l`` (paper S3.1.3).
+
+    l_a = sqrt( sum_e (l_e - l_mu)^2 / (N_e * l_mu^2) )
+    M_l = l_a / sqrt(N_e - 1)
+
+O(|E|): one gather + two reductions. The Spark version explodes a
+per-vertex collected array back into rows purely to reuse
+aggregateMessages; the flat-array form needs none of that.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.geometry import edge_lengths
+
+
+def edge_length_variation(pos, edges, *, edge_valid=None):
+    lengths = edge_lengths(pos, edges)
+    if edge_valid is None:
+        edge_valid = jnp.ones(lengths.shape, dtype=bool)
+    n_e = jnp.maximum(jnp.sum(edge_valid), 1)
+    l_mu = jnp.sum(jnp.where(edge_valid, lengths, 0.0)) / n_e
+    sq = jnp.where(edge_valid, (lengths - l_mu) ** 2, 0.0)
+    l_a = jnp.sqrt(jnp.sum(sq) / (n_e * jnp.maximum(l_mu, 1e-30) ** 2))
+    return jnp.where(n_e > 1, l_a / jnp.sqrt(jnp.maximum(n_e - 1, 1)), 0.0)

@@ -1,0 +1,121 @@
+"""2-D geometric primitives for readability evaluation.
+
+Pure-jnp, shape-polymorphic building blocks shared by the exact and the
+enhanced (grid) metric implementations, the Pallas kernels' reference
+oracles, and the distributed drivers.
+
+Conventions
+-----------
+* positions: float array ``(V, 2)`` (or separate x/y vectors).
+* edges: int32 array ``(E, 2)`` of vertex ids (undirected; (v, u) stored
+  once in arbitrary order).
+* Angles of undirected line segments live in ``[0, pi)`` (``theta``);
+  directed angles live in ``[0, 2*pi)``.
+* Degenerate configurations (exactly collinear overlapping segments,
+  coincident points) follow the paper's convention: collinear touching is
+  not treated specially (strict sign products), and edge pairs sharing an
+  endpoint are excluded from crossing counts.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+TWO_PI = 2.0 * jnp.pi
+
+
+def ccw(ax, ay, bx, by, cx, cy):
+    """Orientation of the triple (A, B, C).
+
+    Returns the sign of the z-component of the cross product
+    ``(B - A) x (C - A)``: +1 counter-clockwise, -1 clockwise, 0 collinear.
+    Broadcasts over any leading shape.
+    """
+    cross = (bx - ax) * (cy - ay) - (by - ay) * (cx - ax)
+    return jnp.sign(cross)
+
+
+def segments_cross(p1x, p1y, q1x, q1y, p2x, p2y, q2x, q2y):
+    """Proper-intersection predicate between segments (p1,q1) and (p2,q2).
+
+    Implements the paper's CCW test (Algorithm 4):
+    ``CCW(p1,q1,p2) * CCW(p1,q1,q2) <= 0 and CCW(p2,q2,p1) * CCW(p2,q2,q1) <= 0``.
+
+    Collinear-overlap cases are intentionally not special-cased (paper
+    S3.1.4). Broadcasts over any leading shape. Returns bool.
+    """
+    d1 = ccw(p1x, p1y, q1x, q1y, p2x, p2y)
+    d2 = ccw(p1x, p1y, q1x, q1y, q2x, q2y)
+    d3 = ccw(p2x, p2y, q2x, q2y, p1x, p1y)
+    d4 = ccw(p2x, p2y, q2x, q2y, q1x, q1y)
+    return (d1 * d2 <= 0) & (d3 * d4 <= 0)
+
+
+def segments_cross_bool(p1x, p1y, q1x, q1y, p2x, p2y, q2x, q2y):
+    """Same predicate as :func:`segments_cross`, restructured so no f32
+    sign-product tensors are materialized: ``sign(a)*sign(b) <= 0`` is
+    ``(a <= 0 & b >= 0) | (a >= 0 & b <= 0)`` — pure boolean dataflow
+    after the cross products (EXPERIMENTS.md SPerf cell A)."""
+    def cross(px, py, qx, qy, rx, ry):
+        return (qx - px) * (ry - py) - (qy - py) * (rx - px)
+
+    d1 = cross(p1x, p1y, q1x, q1y, p2x, p2y)
+    d2 = cross(p1x, p1y, q1x, q1y, q2x, q2y)
+    d3 = cross(p2x, p2y, q2x, q2y, p1x, p1y)
+    d4 = cross(p2x, p2y, q2x, q2y, q1x, q1y)
+    s12 = ((d1 <= 0) & (d2 >= 0)) | ((d1 >= 0) & (d2 <= 0))
+    s34 = ((d3 <= 0) & (d4 >= 0)) | ((d3 >= 0) & (d4 <= 0))
+    return s12 & s34
+
+
+def segment_theta(x1, y1, x2, y2):
+    """Undirected angle of segment with the x-axis, folded into [0, pi)."""
+    theta = jnp.arctan2(y2 - y1, x2 - x1)
+    return jnp.where(theta < 0, theta + jnp.pi, theta) % jnp.pi
+
+
+def directed_angle(x1, y1, x2, y2):
+    """Directed angle of the ray (x1,y1) -> (x2,y2) in [0, 2*pi)."""
+    a = jnp.arctan2(y2 - y1, x2 - x1)
+    return jnp.where(a < 0, a + TWO_PI, a)
+
+
+def line_crossing_angle(theta_a, theta_b):
+    """Acute crossing angle between two undirected lines, in [0, pi/2]."""
+    d = jnp.abs(theta_a - theta_b)
+    return jnp.minimum(d, jnp.pi - d)
+
+
+def crossing_angle_deviation(theta_a, theta_b, ideal):
+    """``|ideal - a_c| / ideal`` where a_c is the acute crossing angle."""
+    a_c = line_crossing_angle(theta_a, theta_b)
+    return jnp.abs(ideal - a_c) / ideal
+
+
+def pair_dist_sq(ax, ay, bx, by):
+    """Squared distances between two point sets: (I,),(I,) x (J,),(J,) -> (I, J)."""
+    dx = ax[:, None] - bx[None, :]
+    dy = ay[:, None] - by[None, :]
+    return dx * dx + dy * dy
+
+
+def edge_lengths(pos, edges):
+    """Euclidean length of every edge. pos (V,2), edges (E,2) -> (E,)."""
+    d = pos[edges[:, 0]] - pos[edges[:, 1]]
+    return jnp.sqrt(jnp.sum(d * d, axis=-1))
+
+
+def edge_endpoints(pos, edges):
+    """Gather endpoint coordinates: returns (x1, y1, x2, y2), each (E,)."""
+    p = pos[edges[:, 0]]
+    q = pos[edges[:, 1]]
+    return p[:, 0], p[:, 1], q[:, 0], q[:, 1]
+
+
+def share_endpoint(v1, u1, v2, u2):
+    """True where edge pairs (v1,u1) x (v2,u2) share at least one vertex.
+
+    Broadcasts (I,) x (J,) -> (I, J) when given ``v1[:, None]`` style
+    operands, or elementwise on equal shapes.
+    """
+    return (v1 == v2) | (v1 == u2) | (u1 == v2) | (u1 == u2)

@@ -1,0 +1,70 @@
+"""Inversion counting: the sequential-sweep alternative, vectorized.
+
+The paper's enhanced edge-crossing sweep is a balanced-BST inversion count
+(O(n log n), inherently sequential). Two TPU-idiomatic counters live here:
+
+* ``count_inversions_dense`` — O(n^2) blocked compare; on TPU the regular
+  dense tile wins for the per-strip sizes the decomposition produces.
+* ``count_inversions_merge`` — O(n log^2 n) bottom-up merge with a
+  vectorized per-level ``searchsorted``; the asymptotic winner for very
+  large strips, provided for completeness and benchmarked in
+  ``benchmarks/table2_runtime.py`` (see DESIGN.md S2).
+
+Both count pairs i < j with a[i] > a[j] (strict).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+_BIG = jnp.float32(3.0e38)
+
+
+def count_inversions_dense(a: jax.Array, valid=None, *, block: int = 1024):
+    n = a.shape[0]
+    if valid is None:
+        valid = jnp.ones(n, dtype=bool)
+    idx = jnp.arange(n)
+    lt = idx[:, None] < idx[None, :]
+    gt = a[:, None] > a[None, :]
+    mask = lt & gt & valid[:, None] & valid[None, :]
+    return jnp.sum(jnp.where(mask, 1, 0), dtype=jnp.int64)
+
+
+def count_inversions_merge(a: jax.Array, valid=None):
+    """Bottom-up merge inversion count. Pads to the next power of two."""
+    n = a.shape[0]
+    if valid is None:
+        valid = jnp.ones(n, dtype=bool)
+    # Stable-compact valid entries to the front (order preserved), then pad
+    # the tail with +BIG sentinels which can never be the larger element of
+    # a *strict* inversion against themselves and are never smaller than a
+    # real element on their right (they sit at the end).
+    order = jnp.argsort(~valid, stable=True)
+    x = jnp.where(valid[order], a[order].astype(jnp.float32), _BIG)
+    # But +BIG at the end would count as inversions vs nothing after it; as
+    # the largest value with ties only among themselves, strict '>' never
+    # fires for (BIG, BIG) pairs, and (BIG, real) pairs cannot occur since
+    # all BIGs are at the end. (real, BIG) pairs fail a[i] > a[j].
+    size = 1
+    while size < x.shape[0]:
+        size *= 2
+    pad = size - x.shape[0]
+    if pad:
+        x = jnp.concatenate([x, jnp.full((pad,), _BIG, jnp.float32)])
+
+    total = jnp.zeros((), jnp.int64)
+    width = 1
+    while width < size:
+        rows = x.reshape(-1, 2 * width)
+        left = rows[:, :width]
+        right = rows[:, width:]
+        # inversions across the boundary: for each b in right,
+        # #{elements of left strictly greater than b}
+        counts = width - jax.vmap(
+            lambda l, r: jnp.searchsorted(l, r, side="right"))(left, right)
+        total = total + jnp.sum(counts, dtype=jnp.int64)
+        x = jnp.sort(rows, axis=1).reshape(-1)
+        width *= 2
+    return total

@@ -1,0 +1,98 @@
+"""Unified readability-evaluation API (the paper's contribution, packaged).
+
+``evaluate_layout`` computes the five readability metrics of the paper for
+a 2-D layout, with either the exact (all-pairs) or the enhanced (grid /
+strip) algorithms. ``M_a`` and ``M_l`` have one algorithm each (they are
+cheap); ``N_c``, ``E_c``, ``E_ca`` switch on ``method``.
+
+This module is single-device; the multi-device drivers wrap the same
+building blocks with ``shard_map`` (:mod:`repro.distributed`).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax.numpy as jnp
+
+from repro.core.crossing import count_crossings_enhanced, count_crossings_exact
+from repro.core.crossing_angle import (DEFAULT_IDEAL, crossing_angle_enhanced,
+                                       crossing_angle_exact)
+from repro.core.edge_length import edge_length_variation
+from repro.core.min_angle import minimum_angle
+from repro.core.occlusion import (count_occlusions_enhanced,
+                                  count_occlusions_exact)
+
+ALL_METRICS = ("node_occlusion", "minimum_angle", "edge_length_variation",
+               "edge_crossing", "edge_crossing_angle")
+
+
+@dataclasses.dataclass(frozen=True)
+class ReadabilityReport:
+    node_occlusion: Optional[int] = None          # N_c (count)
+    minimum_angle: Optional[float] = None         # M_a in [0, 1]
+    edge_length_variation: Optional[float] = None  # M_l
+    edge_crossing: Optional[int] = None           # E_c (count)
+    edge_crossing_angle: Optional[float] = None   # E_ca in [0, 1]
+    crossing_count_for_angle: Optional[int] = None
+    overflow: int = 0                             # capacity drops (enhanced)
+
+    def asdict(self):
+        return dataclasses.asdict(self)
+
+
+def evaluate_layout(pos, edges, *, radius: float = 0.5,
+                    ideal_angle=DEFAULT_IDEAL, method: str = "enhanced",
+                    metrics=ALL_METRICS, n_strips: int = 64,
+                    orientation: str = "both") -> ReadabilityReport:
+    """Evaluate readability metrics of a layout.
+
+    Args:
+      pos: (V, 2) vertex coordinates.
+      edges: (E, 2) int vertex-id pairs.
+      radius: node disc radius (occlusion threshold is 2*radius).
+      ideal_angle: ideal crossing angle in radians (default 70 deg).
+      method: 'exact' (all-pairs, paper S3.1) or 'enhanced' (grid/strips,
+        paper S3.2).
+      metrics: subset of ALL_METRICS to compute.
+      n_strips: strip count for the enhanced crossing algorithms.
+      orientation: 'vertical' | 'horizontal' | 'both' (enhanced only).
+    """
+    pos = jnp.asarray(pos, jnp.float32)
+    edges = jnp.asarray(edges, jnp.int32)
+    out = {}
+    overflow = 0
+
+    if "node_occlusion" in metrics:
+        if method == "exact":
+            out["node_occlusion"] = int(count_occlusions_exact(pos, radius))
+        else:
+            c, ov = count_occlusions_enhanced(pos, radius)
+            out["node_occlusion"] = int(c)
+            overflow += int(ov)
+    if "minimum_angle" in metrics:
+        m_a, _ = minimum_angle(pos, edges)
+        out["minimum_angle"] = float(m_a)
+    if "edge_length_variation" in metrics:
+        out["edge_length_variation"] = float(edge_length_variation(pos, edges))
+    if "edge_crossing" in metrics:
+        if method == "exact":
+            out["edge_crossing"] = int(count_crossings_exact(pos, edges))
+        else:
+            c, ov = count_crossings_enhanced(pos, edges, n_strips=n_strips,
+                                             orientation=orientation)
+            out["edge_crossing"] = int(c)
+            overflow += int(ov)
+    if "edge_crossing_angle" in metrics:
+        if method == "exact":
+            e_ca, count, _ = crossing_angle_exact(pos, edges, ideal=ideal_angle)
+        else:
+            e_ca, count, _, ov = crossing_angle_enhanced(
+                pos, edges, n_strips=n_strips, ideal=ideal_angle,
+                orientation=orientation)
+            overflow += int(ov)
+        out["edge_crossing_angle"] = float(e_ca)
+        out["crossing_count_for_angle"] = int(count)
+
+    return ReadabilityReport(overflow=overflow, **out)

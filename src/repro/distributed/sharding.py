@@ -1,0 +1,68 @@
+"""Mesh-axis conventions and sharding helpers.
+
+Logical axes:
+  * ``pod``   — outermost data-parallel axis across pods (multi-pod mesh).
+  * ``data``  — data parallel within a pod (batch / independent strips).
+  * ``model`` — tensor parallel (heads / d_ff / experts / vocab / table rows).
+
+Helpers here keep divisibility honest: q-heads are padded up to a multiple
+of the model-axis size, kv-heads are repeated (Megatron GQA convention)
+when fewer than the model axis, vocab/d_ff are padded to multiples.
+"""
+
+from __future__ import annotations
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def batch_axes(mesh: Mesh):
+    """The composite batch-sharding axis tuple for this mesh."""
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def model_axis_size(mesh: Mesh) -> int:
+    return mesh.shape["model"]
+
+
+def data_axis_size(mesh: Mesh) -> int:
+    n = mesh.shape["data"]
+    if "pod" in mesh.axis_names:
+        n *= mesh.shape["pod"]
+    return n
+
+
+def round_up(n: int, m: int) -> int:
+    return -(-n // m) * m
+
+
+def pad_heads(n_heads: int, model_size: int) -> int:
+    """Pad a head count up to a multiple of the model axis (dummy heads are
+    masked out of the output projection)."""
+    return round_up(n_heads, model_size)
+
+
+def repeat_kv_heads(n_kv: int, model_size: int) -> int:
+    """Effective kv-head count after Megatron-style duplication so the kv
+    dimension shards evenly: max(n_kv, model) rounded to a multiple."""
+    if n_kv >= model_size:
+        return round_up(n_kv, model_size)
+    assert model_size % n_kv == 0 or True
+    return model_size
+
+
+def named(mesh: Mesh, *spec) -> NamedSharding:
+    return NamedSharding(mesh, P(*spec))
+
+
+def shard_batch_spec(mesh: Mesh, *trailing) -> P:
+    """PartitionSpec with the batch dim sharded over (pod?, data)."""
+    return P(batch_axes(mesh), *trailing)
+
+
+def tree_shardings(mesh: Mesh, spec_tree):
+    """Map a pytree of PartitionSpecs to NamedShardings."""
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        spec_tree, is_leaf=lambda x: isinstance(x, P))

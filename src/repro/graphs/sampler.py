@@ -1,0 +1,56 @@
+"""Device-side uniform neighbor sampler (GraphSAGE fanout batches).
+
+The CSR adjacency lives on device; sampling is pure ``jax.random`` +
+gathers, so the whole minibatch path jits and shards. This IS the real
+sampler the ``minibatch_lg`` shape requires — the dry-run's input specs
+are exactly the padded tensors this module emits.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+def sample_neighbors(indptr, indices, seeds, fanout: int, key):
+    """Uniform-with-replacement neighbor sampling.
+
+    Returns (neighbor ids (B, fanout) int32, mask (B, fanout) bool).
+    Zero-degree seeds get a fully-masked row.
+    """
+    start = jnp.take(indptr, seeds)
+    end = jnp.take(indptr, seeds + 1)
+    deg = end - start
+    r = jax.random.randint(key, (seeds.shape[0], fanout), 0, 1 << 30)
+    offs = r % jnp.maximum(deg, 1)[:, None]
+    nbr = jnp.take(indices, start[:, None] + offs)
+    mask = (deg > 0)[:, None] & jnp.ones((1, fanout), bool)
+    return jnp.where(mask, nbr, 0), mask
+
+
+@functools.partial(jax.jit, static_argnames=("fanouts",))
+def sample_fanout_batch(indptr, indices, feats, labels, seeds, key,
+                        fanouts: tuple):
+    """Two-hop dense fanout batch for GraphSAGE.
+
+    Returns dict(x0 (B,d), x1 (B,f1,d), x2 (B,f1,f2,d), m1, m2,
+    labels (B,)). Features are gathered on device from the (sharded or
+    replicated) feature matrix.
+    """
+    f1, f2 = fanouts
+    k1, k2 = jax.random.split(key)
+    B = seeds.shape[0]
+    n1, m1 = sample_neighbors(indptr, indices, seeds, f1, k1)
+    n2, m2 = sample_neighbors(indptr, indices, n1.reshape(-1), f2, k2)
+    n2 = n2.reshape(B, f1, f2)
+    m2 = m2.reshape(B, f1, f2) & m1[:, :, None]
+    return {
+        "x0": jnp.take(feats, seeds, axis=0),
+        "x1": jnp.take(feats, n1, axis=0),
+        "x2": jnp.take(feats, n2, axis=0),
+        "m1": m1,
+        "m2": m2,
+        "labels": jnp.take(labels, seeds),
+    }

@@ -1,0 +1,2 @@
+# Pallas TPU kernels for the paper's pairwise geometric hot spots, with
+# jit'd wrappers in ops.py and pure-jnp oracles in ref.py.

@@ -1,0 +1,71 @@
+"""Pure-jnp oracles for the Pallas kernels (and ground truth for the
+enhanced algorithms' accuracy tests).
+
+Deliberately naive O(n^2) single-shot implementations — no blocking, no
+tricks — so they are unarguably correct and cheap to audit. Used by:
+  * per-kernel allclose tests (tests/test_kernels.py),
+  * the accuracy benchmarks (paper Tables 3-4), where they play the role
+    of the paper's 'straightforward C++ implementations'.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.geometry import segment_theta, segments_cross
+
+
+def occlusion_count_ref(x, y, radius, valid=None):
+    """#{(i, j): i < j, dist(p_i, p_j) < 2r}."""
+    n = x.shape[0]
+    if valid is None:
+        valid = jnp.ones(n, dtype=bool)
+    d2 = (x[:, None] - x[None, :]) ** 2 + (y[:, None] - y[None, :]) ** 2
+    tri = jnp.arange(n)[:, None] < jnp.arange(n)[None, :]
+    mask = tri & valid[:, None] & valid[None, :]
+    return jnp.sum(mask & (d2 < (2.0 * radius) ** 2), dtype=jnp.int64)
+
+
+def crossing_count_ref(x1, y1, x2, y2, v, u, valid=None):
+    """#{(i, j): i < j, segments properly cross, no shared endpoint}."""
+    n = x1.shape[0]
+    if valid is None:
+        valid = jnp.ones(n, dtype=bool)
+    cross = segments_cross(x1[:, None], y1[:, None], x2[:, None], y2[:, None],
+                           x1[None, :], y1[None, :], x2[None, :], y2[None, :])
+    shared = ((v[:, None] == v[None, :]) | (v[:, None] == u[None, :]) |
+              (u[:, None] == v[None, :]) | (u[:, None] == u[None, :]))
+    tri = jnp.arange(n)[:, None] < jnp.arange(n)[None, :]
+    mask = tri & valid[:, None] & valid[None, :] & ~shared
+    return jnp.sum(mask & cross, dtype=jnp.int64)
+
+
+def crossing_angle_ref(x1, y1, x2, y2, v, u, ideal, valid=None):
+    """(count, sum of |ideal - a_c| / ideal) over properly crossing pairs."""
+    n = x1.shape[0]
+    if valid is None:
+        valid = jnp.ones(n, dtype=bool)
+    cross = segments_cross(x1[:, None], y1[:, None], x2[:, None], y2[:, None],
+                           x1[None, :], y1[None, :], x2[None, :], y2[None, :])
+    shared = ((v[:, None] == v[None, :]) | (v[:, None] == u[None, :]) |
+              (u[:, None] == v[None, :]) | (u[:, None] == u[None, :]))
+    tri = jnp.arange(n)[:, None] < jnp.arange(n)[None, :]
+    mask = tri & valid[:, None] & valid[None, :] & ~shared & cross
+    th = segment_theta(x1, y1, x2, y2)
+    d = jnp.abs(th[:, None] - th[None, :])
+    a_c = jnp.minimum(d, jnp.pi - d)
+    dev = jnp.abs(ideal - a_c) / ideal
+    return (jnp.sum(mask, dtype=jnp.int64), jnp.sum(jnp.where(mask, dev, 0.0)))
+
+
+def reversal_count_ref(yl, yr, v, u, valid=None):
+    """Per-strip oracle: #{(i, j): yl_i < yl_j, yr_i > yr_j, no shared
+    endpoint} over ordered pairs (each crossing counted once)."""
+    n = yl.shape[0]
+    if valid is None:
+        valid = jnp.ones(n, dtype=bool)
+    rev = (yl[:, None] < yl[None, :]) & (yr[:, None] > yr[None, :])
+    shared = ((v[:, None] == v[None, :]) | (v[:, None] == u[None, :]) |
+              (u[:, None] == v[None, :]) | (u[:, None] == u[None, :]))
+    mask = rev & ~shared & valid[:, None] & valid[None, :]
+    return jnp.sum(mask, dtype=jnp.int64)

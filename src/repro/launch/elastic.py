@@ -1,0 +1,51 @@
+"""Elastic scaling: re-shard a checkpoint onto whatever devices exist now.
+
+The recovery story for node failures at scale:
+  1. checkpoints store *logical* (unsharded) arrays (checkpoint/manager);
+  2. on restart, the launcher rebuilds the mesh from the live device list
+     (``choose_mesh_shape``) — fewer/more hosts just produce a different
+     mesh shape;
+  3. ``elastic_restore`` re-computes shardings for the new mesh and
+     ``device_put``s the restored pytree onto them.
+
+Straggler mitigation at this layer: the readability workloads
+over-decompose (strips >> devices) so re-balancing after a shrink is just
+a different strip->device round-robin; training workloads re-enter the
+standard SPMD step where per-step synchronization is the compiled
+collectives only.
+"""
+
+from __future__ import annotations
+
+import jax
+from jax.sharding import AxisType
+
+from repro.checkpoint.manager import CheckpointManager
+
+
+def choose_mesh_shape(n_devices: int, *, max_model: int = 16):
+    """Pick (data, model) for the available device count: the largest
+    power-of-two model axis <= max_model that divides n_devices."""
+    model = 1
+    while model * 2 <= max_model and n_devices % (model * 2) == 0:
+        model *= 2
+    return (n_devices // model, model)
+
+
+def make_elastic_mesh():
+    n = len(jax.devices())
+    shape = choose_mesh_shape(n)
+    return jax.make_mesh(shape, ("data", "model"),
+                         axis_types=(AxisType.Auto, AxisType.Auto))
+
+
+def elastic_restore(directory: str, template, sharding_fn):
+    """Restore the newest valid checkpoint onto a freshly-built mesh.
+
+    ``sharding_fn(mesh, template) -> shardings pytree``; returns
+    (tree, step, mesh)."""
+    mesh = make_elastic_mesh()
+    mgr = CheckpointManager(directory)
+    shardings = sharding_fn(mesh, template)
+    tree, step = mgr.restore(template, shardings=shardings)
+    return tree, step, mesh

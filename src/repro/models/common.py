@@ -1,0 +1,141 @@
+"""Shared model building blocks (pure JAX, framework-free).
+
+Parameters are plain pytrees of arrays; every module is a function
+``f(params, inputs, cfg) -> outputs``. Layer stacks store each leaf with a
+leading ``(n_layers, ...)`` dim and run under ``lax.scan`` (+ optional
+``jax.checkpoint``) so the lowered HLO is depth-independent — essential to
+keep 512-device dry-run compiles tractable and remat memory bounded.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def truncated_normal(key, shape, scale, dtype=jnp.float32):
+    return (scale * jax.random.truncated_normal(key, -2.0, 2.0, shape)
+            ).astype(dtype)
+
+
+def dense_init(key, d_in, d_out, dtype=jnp.float32, extra_leading=()):
+    scale = (1.0 / d_in) ** 0.5
+    return truncated_normal(key, (*extra_leading, d_in, d_out), scale, dtype)
+
+
+def rms_norm(x, scale, eps=1e-6):
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    out = x * lax.rsqrt(var + eps)
+    return (out * (1.0 + scale.astype(jnp.float32))).astype(dtype)
+
+
+def swiglu(x, w_gate, w_up, w_down):
+    g = jnp.einsum("...d,df->...f", x, w_gate)
+    h = jnp.einsum("...d,df->...f", x, w_up)
+    return jnp.einsum("...f,fd->...d", jax.nn.silu(g) * h, w_down)
+
+
+# ---------------------------------------------------------------------------
+# rotary position embeddings
+# ---------------------------------------------------------------------------
+
+def rope_freqs(d_head: int, theta: float):
+    return 1.0 / (theta ** (jnp.arange(0, d_head, 2, dtype=jnp.float32)
+                            / d_head))
+
+
+def apply_rope(x, positions, theta: float):
+    """x: (..., S, H, d_head); positions: broadcastable to (..., S)."""
+    d_head = x.shape[-1]
+    freqs = rope_freqs(d_head, theta)                      # (d/2,)
+    ang = positions[..., :, None, None].astype(jnp.float32) * freqs  # (...,S,1,d/2)
+    cos = jnp.cos(ang)
+    sin = jnp.sin(ang)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# losses
+# ---------------------------------------------------------------------------
+
+def chunked_softmax_xent(logits_fn: Callable, x, labels, mask, *,
+                         n_chunks: int, z_loss: float = 1e-4):
+    """Cross entropy over the vocab, computed in sequence chunks so the
+    (tokens, vocab) logits tensor never fully materializes.
+
+    ``logits_fn(x_chunk) -> (tokens_chunk, V)``; ``x`` is (T, d) flattened
+    tokens, labels/mask are (T,).
+    """
+    T = x.shape[0]
+    assert T % n_chunks == 0, (T, n_chunks)
+    chunk = T // n_chunks
+
+    def body(carry, idx):
+        loss_sum, z_sum, count = carry
+        xc = lax.dynamic_slice_in_dim(x, idx * chunk, chunk, axis=0)
+        lc = lax.dynamic_slice_in_dim(labels, idx * chunk, chunk, axis=0)
+        mc = lax.dynamic_slice_in_dim(mask, idx * chunk, chunk, axis=0)
+        logits = logits_fn(xc).astype(jnp.float32)
+        lse = jax.scipy.special.logsumexp(logits, axis=-1)
+        picked = jnp.take_along_axis(logits, lc[:, None], axis=-1)[:, 0]
+        nll = (lse - picked) * mc
+        zl = (lse ** 2) * mc
+        return ((loss_sum + nll.sum(), z_sum + zl.sum(), count + mc.sum()),
+                None)
+
+    (loss_sum, z_sum, count), _ = lax.scan(
+        body, (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32),
+               jnp.zeros((), jnp.float32)),
+        jnp.arange(n_chunks))
+    denom = jnp.maximum(count, 1.0)
+    return loss_sum / denom + z_loss * z_sum / denom, count
+
+
+def softmax_xent(logits, labels, mask=None):
+    logits = logits.astype(jnp.float32)
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    picked = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = lse - picked
+    if mask is not None:
+        return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(nll)
+
+
+# ---------------------------------------------------------------------------
+# scan-over-layers helper
+# ---------------------------------------------------------------------------
+
+def scan_layers(block_fn, x, stacked_params, *, remat: bool = True,
+                policy=None, xs_extra=None):
+    """Run ``x = block_fn(x, layer_params[, extra])`` over stacked layers.
+
+    ``stacked_params``: pytree with leading (L, ...) leaves.
+    ``xs_extra``: optional extra per-layer scan inputs (e.g. KV cache
+    slices); when given, ``block_fn`` must return ``(x, y_extra)`` and the
+    stacked ``y_extra`` is returned alongside x.
+    """
+    fn = block_fn
+    if remat:
+        fn = jax.checkpoint(fn, policy=policy)
+
+    if xs_extra is None:
+        def body(carry, layer):
+            return fn(carry, layer), None
+        x, _ = lax.scan(body, x, stacked_params)
+        return x
+
+    def body(carry, layer_and_extra):
+        layer, extra = layer_and_extra
+        new_carry, y = fn(carry, layer, extra)
+        return new_carry, y
+
+    x, ys = lax.scan(body, x, (stacked_params, xs_extra))
+    return x, ys

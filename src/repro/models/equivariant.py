@@ -1,0 +1,531 @@
+"""E(3)-equivariant GNNs: NequIP and EquiformerV2 (eSCN), self-contained.
+
+* NequIP (arXiv:2101.03164): irrep node features (l <= l_max, C channels),
+  interaction = CG tensor product of source features with edge spherical
+  harmonics, per-path radial weights from an RBF MLP, gated nonlinearity.
+  The CG contraction is the O(L^6) regime of the kernel taxonomy.
+
+* EquiformerV2 (arXiv:2306.12059): replaces the CG contraction with the
+  eSCN trick — rotate each edge's features into the edge-aligned frame
+  (Wigner-D from repro.models.so3), apply an SO(2) linear mixing that is
+  block-diagonal in |m| and truncated at m_max, rotate back. O(L^3).
+  Attention weights come from the m=0 (scalar) channel via segment
+  softmax over incoming edges.
+
+Simplifications vs the reference implementations (documented in
+DESIGN.md): single parity per degree, per-channel radial gates in eSCN
+(not per-path), no separable-S2 activation (gated activation instead).
+Equivariance of both message functions is property-tested in
+tests/test_equivariant.py under random global rotations.
+
+Edge processing is chunked (``lax.map``) so the (E_chunk, irrep, irrep)
+Wigner blocks stay memory-bounded on huge edge sets.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models import common, so3
+
+
+# ---------------------------------------------------------------------------
+# shared pieces
+# ---------------------------------------------------------------------------
+
+def radial_basis(r, n_rbf: int, cutoff: float):
+    """Gaussian RBF with a smooth polynomial cutoff envelope."""
+    centers = jnp.linspace(0.0, cutoff, n_rbf)
+    width = cutoff / n_rbf
+    rb = jnp.exp(-((r[..., None] - centers) / width) ** 2)
+    x = jnp.clip(r / cutoff, 0.0, 1.0)
+    env = 1.0 - 10.0 * x ** 3 + 15.0 * x ** 4 - 6.0 * x ** 5  # poly cutoff
+    return rb * env[..., None]
+
+
+def segment_softmax(logits, segment_ids, num_segments):
+    """Numerically-stable softmax over variable-size segments (fp32
+    internals)."""
+    in_dtype = logits.dtype
+    logits = logits.astype(jnp.float32)
+    seg_max = jax.ops.segment_max(logits, segment_ids,
+                                  num_segments=num_segments)
+    seg_max = jnp.where(jnp.isfinite(seg_max), seg_max, 0.0)
+    ex = jnp.exp(logits - seg_max[segment_ids])
+    denom = jax.ops.segment_sum(ex, segment_ids, num_segments=num_segments)
+    return (ex / jnp.maximum(denom[segment_ids], 1e-9)).astype(in_dtype)
+
+
+
+def _pick_chunks(n_edges: int, target_chunk: int) -> int:
+    """Largest chunk count <= n_edges/target that divides n_edges (static)."""
+    n_desired = max(n_edges // max(target_chunk, 1), 1)
+    for n in range(n_desired, 0, -1):
+        if n_edges % n == 0:
+            return n
+    return 1
+
+def _mlp2(key, d_in, d_hidden, d_out):
+    k1, k2 = jax.random.split(key)
+    return {"w1": common.dense_init(k1, d_in, d_hidden),
+            "b1": jnp.zeros((d_hidden,)),
+            "w2": common.dense_init(k2, d_hidden, d_out),
+            "b2": jnp.zeros((d_out,))}
+
+
+def _mlp2_apply(p, x):
+    h = jax.nn.silu(x @ p["w1"] + p["b1"])
+    return h @ p["w2"] + p["b2"]
+
+
+# ---------------------------------------------------------------------------
+# NequIP
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class NequIPConfig:
+    name: str
+    n_layers: int = 5
+    d_hidden: int = 32           # channels per degree
+    l_max: int = 2
+    n_rbf: int = 8
+    cutoff: float = 5.0
+    n_species: int = 16
+    radial_hidden: int = 64
+    edge_chunk: int = 16384
+    dtype: Any = jnp.float32
+
+    @property
+    def irrep_dim(self):
+        return (self.l_max + 1) ** 2
+
+    @property
+    def paths(self):
+        return so3.tp_paths(self.l_max, self.l_max, self.l_max)
+
+
+def init_nequip_params(cfg: NequIPConfig, key):
+    keys = jax.random.split(key, 4 * cfg.n_layers + 3)
+    ki = iter(keys)
+    C = cfg.d_hidden
+    n_paths = len(cfg.paths)
+    layers = []
+    for _ in range(cfg.n_layers):
+        layers.append({
+            "radial": _mlp2(next(ki), cfg.n_rbf, cfg.radial_hidden,
+                            n_paths * C),
+            # per-degree channel mixes for self + message
+            "w_self": common.truncated_normal(next(ki),
+                                              (cfg.l_max + 1, C, C),
+                                              C ** -0.5),
+            "w_msg": common.truncated_normal(next(ki),
+                                             (cfg.l_max + 1, C, C),
+                                             C ** -0.5),
+            "gate": common.dense_init(next(ki), C, cfg.l_max * C),
+        })
+    return {
+        "species_embed": common.truncated_normal(
+            next(ki), (cfg.n_species, C), 0.5),
+        "layers": layers,
+        "readout": _mlp2(next(ki), C, cfg.radial_hidden, 1),
+    }
+
+
+def _nequip_messages(f, src_feat, Y, radial_w, cfg: NequIPConfig):
+    """CG tensor-product messages for one edge chunk.
+
+    src_feat: (E, irrep, C); Y: (E, irrep_filter); radial_w: (E, n_paths*C).
+    Returns (E, irrep, C).
+    """
+    C = cfg.d_hidden
+    sl = so3.irrep_slices(cfg.l_max)
+    out = [jnp.zeros((src_feat.shape[0], 2 * l + 1, C), cfg.dtype)
+           for l in range(cfg.l_max + 1)]
+    for p_idx, (l1, l2, l3) in enumerate(cfg.paths):
+        cg = so3.cg_real(l1, l2, l3)                     # (2l1+1,2l2+1,2l3+1)
+        w = lax.dynamic_slice_in_dim(radial_w, p_idx * C, C, axis=1)
+        x1 = src_feat[:, sl[l1], :]
+        y2 = Y[:, sl[l2]]
+        m = jnp.einsum("ijk,eic,ej->ekc", cg, x1, y2)
+        out[l3] = out[l3] + m * w[:, None, :]
+    return jnp.concatenate(out, axis=1)
+
+
+def nequip_forward(params, batch, cfg: NequIPConfig, *, n_graphs: int = 1):
+    """batch: positions (N,3), species (N,), edge_src/dst (E,), edge_mask,
+    node_mask, graph_id (N,). ``n_graphs`` is static. Returns per-graph
+    energies."""
+    pos = batch["positions"].astype(cfg.dtype)
+    src, dst = batch["edge_src"], batch["edge_dst"]
+    emask = batch["edge_mask"]
+    N = pos.shape[0]
+    C = cfg.d_hidden
+    irrep = cfg.irrep_dim
+
+    f = jnp.zeros((N, irrep, C), cfg.dtype)
+    f = f.at[:, 0, :].set(
+        jnp.take(params["species_embed"], batch["species"], axis=0))
+
+    vec = pos[src] - pos[dst]
+    r = jnp.sqrt(jnp.maximum(jnp.sum(vec * vec, -1), 1e-12))
+    unit = vec / r[:, None]
+    Y = so3.real_sph_harm(unit, cfg.l_max).astype(cfg.dtype)   # (E, irrep)
+    rbf = radial_basis(r, cfg.n_rbf, cfg.cutoff).astype(cfg.dtype)
+    # degenerate (self/zero-length) edges have no meaningful direction
+    emask = emask & (r > 1e-5)
+    w_edge = jnp.where(emask[:, None], 1.0, 0.0)
+
+    sl = so3.irrep_slices(cfg.l_max)
+    E = src.shape[0]
+    n_chunks = _pick_chunks(E, cfg.edge_chunk)
+    Ec = E // n_chunks
+
+    for layer in params["layers"]:
+        radial_w = _mlp2_apply(layer["radial"], rbf) * w_edge
+
+        def msg_chunk(ci, f=f, radial_w=radial_w):
+            s = lax.dynamic_slice_in_dim(src, ci * Ec, Ec, 0)
+            d = lax.dynamic_slice_in_dim(dst, ci * Ec, Ec, 0)
+            Yc = lax.dynamic_slice_in_dim(Y, ci * Ec, Ec, 0)
+            wc = lax.dynamic_slice_in_dim(radial_w, ci * Ec, Ec, 0)
+            m = _nequip_messages(f, jnp.take(f, s, axis=0), Yc, wc, cfg)
+            return jax.ops.segment_sum(m, d, num_segments=N)
+
+        agg = lax.map(msg_chunk, jnp.arange(n_chunks)).sum(0)
+
+        # per-degree self-interaction + message mix, gated nonlinearity
+        new = []
+        gates = jax.nn.sigmoid(
+            jnp.einsum("nc,cg->ng", f[:, 0, :], layer["gate"]))
+        for l in range(cfg.l_max + 1):
+            h = (jnp.einsum("nic,cd->nid", f[:, sl[l], :],
+                            layer["w_self"][l])
+                 + jnp.einsum("nic,cd->nid", agg[:, sl[l], :],
+                              layer["w_msg"][l]))
+            if l == 0:
+                h = jax.nn.silu(h)
+            else:
+                g = lax.dynamic_slice_in_dim(gates, (l - 1) * C, C, axis=1)
+                h = h * g[:, None, :]
+            new.append(h)
+        f = f + jnp.concatenate(new, axis=1)
+
+    node_e = _mlp2_apply(params["readout"], f[:, 0, :])[:, 0]
+    node_e = jnp.where(batch["node_mask"], node_e, 0.0)
+    return jax.ops.segment_sum(node_e, batch["graph_id"],
+                               num_segments=n_graphs)
+
+
+# ---------------------------------------------------------------------------
+# EquiformerV2 (eSCN SO(2) convolutions)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class EquiformerConfig:
+    name: str
+    n_layers: int = 12
+    d_hidden: int = 128
+    l_max: int = 6
+    m_max: int = 2
+    n_heads: int = 8
+    n_rbf: int = 16
+    cutoff: float = 8.0
+    n_species: int = 16
+    radial_hidden: int = 128
+    edge_chunk: int = 4096
+    dtype: Any = jnp.float32
+    # beyond-paper perf (EXPERIMENTS.md SPerf cell C): slice the Wigner
+    # rotation to the |m| <= m_max rows the SO(2) conv can see — exactly
+    # equivalent output (high-m components are truncated anyway), ~16x
+    # less rotation work/traffic at l_max=6, m_max=2.
+    compact_escn: bool = False
+    # shard the channel dim of node irrep features over the model axis
+    # (requires an active mesh; big-graph memory/collective fix)
+    shard_channels: bool = False
+
+    @property
+    def irrep_dim(self):
+        return (self.l_max + 1) ** 2
+
+
+def _m_component_ids(l_max: int, m: int):
+    """Flat irrep indices of the (+m) and (-m) components for all l >= |m|."""
+    pos = [l * l + l + m for l in range(abs(m), l_max + 1)]
+    neg = [l * l + l - m for l in range(abs(m), l_max + 1)]
+    return jnp.asarray(pos, jnp.int32), jnp.asarray(neg, jnp.int32)
+
+
+def _compact_layout(l_max: int, m_max: int):
+    """Compact eSCN layout: for each l, only components with |m| <= m_max.
+
+    Returns (per-l flat-irrep index lists, per-l compact slices, total)."""
+    per_l_ids = []
+    per_l_slices = []
+    off = 0
+    for l in range(l_max + 1):
+        mm = min(l, m_max)
+        ids = [l * l + l + m for m in range(-mm, mm + 1)]
+        per_l_ids.append(ids)
+        per_l_slices.append(slice(off, off + len(ids)))
+        off += len(ids)
+    return per_l_ids, per_l_slices, off
+
+
+def _compact_m_ids(l_max: int, m_max: int, m: int):
+    """Indices of (+m, -m) component pairs within the compact layout."""
+    _, slices, _ = _compact_layout(l_max, m_max)
+    pos, neg = [], []
+    for l in range(abs(m), l_max + 1):
+        mm = min(l, m_max)
+        base = slices[l].start
+        pos.append(base + mm + m)
+        neg.append(base + mm - m)
+    return jnp.asarray(pos, jnp.int32), jnp.asarray(neg, jnp.int32)
+
+
+def init_equiformer_params(cfg: EquiformerConfig, key):
+    keys = jax.random.split(key, (10 + 2 * cfg.m_max) * cfg.n_layers + 4)
+    ki = iter(keys)
+    C = cfg.d_hidden
+    layers = []
+    for _ in range(cfg.n_layers):
+        so2 = {"w0": common.truncated_normal(
+            next(ki), ((cfg.l_max + 1) * C, (cfg.l_max + 1) * C),
+            ((cfg.l_max + 1) * C) ** -0.5)}
+        for m in range(1, cfg.m_max + 1):
+            n_l = cfg.l_max + 1 - m
+            so2[f"w1_{m}"] = common.truncated_normal(
+                next(ki), (n_l * C, n_l * C), (n_l * C) ** -0.5)
+            so2[f"w2_{m}"] = common.truncated_normal(
+                next(ki), (n_l * C, n_l * C), (n_l * C) ** -0.5)
+        layers.append({
+            "so2": so2,
+            "radial": _mlp2(next(ki), cfg.n_rbf, cfg.radial_hidden, C),
+            "attn": common.dense_init(next(ki), 2 * C, cfg.n_heads),
+            "w_out": common.truncated_normal(next(ki),
+                                             (cfg.l_max + 1, C, C),
+                                             C ** -0.5),
+            "gate": common.dense_init(next(ki), C, cfg.l_max * C),
+            "ffn_w1": common.truncated_normal(next(ki),
+                                              (cfg.l_max + 1, C, C),
+                                              C ** -0.5),
+            "ffn_w2": common.truncated_normal(next(ki),
+                                              (cfg.l_max + 1, C, C),
+                                              C ** -0.5),
+            "ffn_gate": common.dense_init(next(ki), C, cfg.l_max * C),
+        })
+    return {
+        "species_embed": common.truncated_normal(next(ki),
+                                                 (cfg.n_species, C), 0.5),
+        "layers": layers,
+        "readout": _mlp2(next(ki), C, cfg.radial_hidden, 1),
+    }
+
+
+def _so2_conv_compact(x_c, so2, cfg: EquiformerConfig):
+    """eSCN SO(2) mixing on the compact |m| <= m_max layout.
+
+    x_c: (E, compact, C); same weights as :func:`_so2_conv`; exactly the
+    same output values on the surviving components."""
+    Ecount = x_c.shape[0]
+    C = cfg.d_hidden
+    outs = []
+    ids0, _ = _compact_m_ids(cfg.l_max, cfg.m_max, 0)
+    x0 = x_c[:, ids0, :].reshape(Ecount, -1)
+    y0 = (x0 @ so2["w0"]).reshape(Ecount, cfg.l_max + 1, C)
+    outs.append((ids0, y0))
+    for m in range(1, cfg.m_max + 1):
+        idp, idn = _compact_m_ids(cfg.l_max, cfg.m_max, m)
+        xp = x_c[:, idp, :].reshape(Ecount, -1)
+        xn = x_c[:, idn, :].reshape(Ecount, -1)
+        w1, w2 = so2[f"w1_{m}"], so2[f"w2_{m}"]
+        n_l = cfg.l_max + 1 - m
+        outs.append((idp, (xp @ w1 - xn @ w2).reshape(Ecount, n_l, C)))
+        outs.append((idn, (xp @ w2 + xn @ w1).reshape(Ecount, n_l, C)))
+    out = jnp.zeros_like(x_c)
+    for ids, val in outs:
+        out = out.at[:, ids, :].set(val)
+    return out
+
+
+def _so2_conv(x_rot, so2, cfg: EquiformerConfig):
+    """eSCN SO(2) mixing in the edge-aligned frame.
+
+    x_rot: (E, irrep, C). Components with |m| > m_max are dropped (the
+    eSCN truncation). Returns (E, irrep, C).
+    """
+    Ecount = x_rot.shape[0]
+    C = cfg.d_hidden
+    out = jnp.zeros_like(x_rot)
+    # m = 0: one dense mix across (l, C)
+    ids0, _ = _m_component_ids(cfg.l_max, 0)
+    x0 = x_rot[:, ids0, :].reshape(Ecount, -1)
+    y0 = (x0 @ so2["w0"]).reshape(Ecount, cfg.l_max + 1, C)
+    out = out.at[:, ids0, :].set(y0)
+    for m in range(1, cfg.m_max + 1):
+        idp, idn = _m_component_ids(cfg.l_max, m)
+        xp = x_rot[:, idp, :].reshape(Ecount, -1)
+        xn = x_rot[:, idn, :].reshape(Ecount, -1)
+        w1, w2 = so2[f"w1_{m}"], so2[f"w2_{m}"]
+        yp = xp @ w1 - xn @ w2
+        yn = xp @ w2 + xn @ w1
+        n_l = cfg.l_max + 1 - m
+        out = out.at[:, idp, :].set(yp.reshape(Ecount, n_l, C))
+        out = out.at[:, idn, :].set(yn.reshape(Ecount, n_l, C))
+    return out
+
+
+def equiformer_forward(params, batch, cfg: EquiformerConfig, *,
+                       n_graphs: int = 1):
+    """Same batch contract as nequip_forward. Returns per-graph energies."""
+    pos = batch["positions"].astype(cfg.dtype)
+    src, dst = batch["edge_src"], batch["edge_dst"]
+    emask = batch["edge_mask"]
+    N = pos.shape[0]
+    C = cfg.d_hidden
+    irrep = cfg.irrep_dim
+    sl = so3.irrep_slices(cfg.l_max)
+
+    def shard_f(x):
+        if cfg.shard_channels:
+            from jax.sharding import PartitionSpec as _P
+            return jax.lax.with_sharding_constraint(
+                x, _P(None, None, "model"))
+        return x
+
+    f = jnp.zeros((N, irrep, C), cfg.dtype)
+    f = f.at[:, 0, :].set(
+        jnp.take(params["species_embed"], batch["species"],
+                 axis=0).astype(cfg.dtype))
+    f = shard_f(f)
+
+    vec = pos[src] - pos[dst]
+    r = jnp.sqrt(jnp.maximum(jnp.sum(vec * vec, -1), 1e-12))
+    unit = vec / r[:, None]
+    alpha, beta = so3.edge_alignment_angles(unit)
+    rbf = radial_basis(r, cfg.n_rbf, cfg.cutoff).astype(cfg.dtype)
+    # degenerate (self/zero-length) edges have no meaningful direction
+    emask = emask & (r > 1e-5)
+    w_edge = jnp.where(emask, 1.0, 0.0)
+
+    E = src.shape[0]
+    n_chunks = _pick_chunks(E, cfg.edge_chunk)
+    Ec = E // n_chunks
+
+    # per-degree Wigner blocks are recomputed per chunk to bound memory
+    def rotate(x, Ds, transpose=False):
+        outs = []
+        for l in range(cfg.l_max + 1):
+            D = Ds[l] if not transpose else jnp.swapaxes(Ds[l], -1, -2)
+            outs.append(jnp.einsum("eij,ejc->eic", D, x[:, sl[l], :]))
+        return jnp.concatenate(outs, axis=1)
+
+    # compact eSCN path (cfg.compact_escn): only the |m| <= m_max Wigner
+    # rows ever reach the SO(2) conv, and only they return — slice the
+    # rotation to those rows. Exactly equivalent (truncated rows are
+    # zero); ~(2l+1)/(2m_max+1) less rotate work + traffic per degree.
+    csl = _compact_layout(cfg.l_max, cfg.m_max)[1]
+
+    def rotate_fwd_compact(x, Ds):
+        outs = []
+        for l in range(cfg.l_max + 1):
+            mm = min(l, cfg.m_max)
+            Dsub = Ds[l][:, l - mm:l + mm + 1, :]     # (E, 2mm+1, 2l+1)
+            outs.append(jnp.einsum("eij,ejc->eic", Dsub, x[:, sl[l], :]))
+        return jnp.concatenate(outs, axis=1)          # (E, compact, C)
+
+    def rotate_bwd_compact(y_c, Ds):
+        outs = []
+        for l in range(cfg.l_max + 1):
+            mm = min(l, cfg.m_max)
+            Dsub = Ds[l][:, l - mm:l + mm + 1, :]
+            outs.append(jnp.einsum("eji,ejc->eic", Dsub, y_c[:, csl[l], :]))
+        return jnp.concatenate(outs, axis=1)          # (E, irrep, C)
+
+    for layer in params["layers"]:
+        layer = jax.tree.map(lambda a: a.astype(cfg.dtype), layer)
+        radial_g = _mlp2_apply(layer["radial"], rbf)       # (E, C)
+
+        def edge_chunk(ci, f=f, radial_g=radial_g, layer=layer):
+            s = lax.dynamic_slice_in_dim(src, ci * Ec, Ec, 0)
+            d = lax.dynamic_slice_in_dim(dst, ci * Ec, Ec, 0)
+            al = lax.dynamic_slice_in_dim(alpha, ci * Ec, Ec, 0)
+            be = lax.dynamic_slice_in_dim(beta, ci * Ec, Ec, 0)
+            rg = lax.dynamic_slice_in_dim(radial_g, ci * Ec, Ec, 0)
+            wm = lax.dynamic_slice_in_dim(w_edge, ci * Ec, Ec, 0)
+            Ds = [so3.wigner_align_to_z(l, al, be).astype(cfg.dtype)
+                  for l in range(cfg.l_max + 1)]
+            x = jnp.take(f, s, axis=0)                     # (Ec, irrep, C)
+            if cfg.compact_escn:
+                x_c = rotate_fwd_compact(x, Ds)
+                y_c = _so2_conv_compact(x_c, layer["so2"], cfg)
+                y_c = y_c * rg[:, None, :] * wm[:, None, None]
+                sc = jnp.concatenate([jnp.take(f[:, 0, :], d, axis=0),
+                                      y_c[:, 0, :]], axis=-1)
+                logit = jax.nn.leaky_relu(sc @ layer["attn"], 0.2)
+                logit = jnp.where(wm[:, None] > 0, logit, -1e30)
+                y = rotate_bwd_compact(y_c, Ds)
+                return y, logit, d
+            x = rotate(x, Ds)
+            y = _so2_conv(x, layer["so2"], cfg)
+            y = y * rg[:, None, :] * wm[:, None, None]
+            # attention logits from scalar channels of src/dst
+            sc = jnp.concatenate([jnp.take(f[:, 0, :], d, axis=0),
+                                  y[:, 0, :]], axis=-1)
+            logit = jax.nn.leaky_relu(sc @ layer["attn"], 0.2)  # (Ec, H)
+            logit = jnp.where(wm[:, None] > 0, logit, -1e30)
+            y = rotate(y, Ds, transpose=True)
+            return y, logit, d
+
+        msgs, logits, dsts = lax.map(edge_chunk, jnp.arange(n_chunks))
+        msgs = msgs.reshape(E, irrep, C)
+        logits = logits.reshape(E, cfg.n_heads)
+        dsts = dsts.reshape(E)
+        attn = jax.vmap(lambda lg: segment_softmax(lg, dsts, N),
+                        in_axes=1, out_axes=1)(logits)     # (E, H)
+        attn = jnp.repeat(attn, C // cfg.n_heads, axis=1)  # (E, C)
+        agg = jax.ops.segment_sum(msgs * attn[:, None, :], dsts,
+                                  num_segments=N)
+
+        # node update: per-degree mix + gated activation, residual
+        gates = jax.nn.sigmoid(
+            jnp.einsum("nc,cg->ng", f[:, 0, :], layer["gate"]))
+        upd = []
+        for l in range(cfg.l_max + 1):
+            h = jnp.einsum("nic,cd->nid", agg[:, sl[l], :], layer["w_out"][l])
+            if l == 0:
+                h = jax.nn.silu(h)
+            else:
+                g = lax.dynamic_slice_in_dim(gates, (l - 1) * C, C, axis=1)
+                h = h * g[:, None, :]
+            upd.append(h)
+        f = f + jnp.concatenate(upd, axis=1)
+
+        # equivariant FFN: two per-degree mixes with scalar gating
+        gates2 = jax.nn.sigmoid(
+            jnp.einsum("nc,cg->ng", f[:, 0, :], layer["ffn_gate"]))
+        ffn = []
+        for l in range(cfg.l_max + 1):
+            h = jnp.einsum("nic,cd->nid", f[:, sl[l], :], layer["ffn_w1"][l])
+            if l == 0:
+                h = jax.nn.silu(h)
+            else:
+                g = lax.dynamic_slice_in_dim(gates2, (l - 1) * C, C, axis=1)
+                h = h * g[:, None, :]
+            ffn.append(jnp.einsum("nic,cd->nid", h, layer["ffn_w2"][l]))
+        f = shard_f(f + jnp.concatenate(ffn, axis=1))
+
+    node_e = _mlp2_apply(params["readout"],
+                         f[:, 0, :].astype(jnp.float32))[:, 0]
+    node_e = jnp.where(batch["node_mask"], node_e, 0.0)
+    return jax.ops.segment_sum(node_e, batch["graph_id"],
+                               num_segments=n_graphs)
+
+
+def energy_loss(energies, targets):
+    return jnp.mean((energies - targets) ** 2)

@@ -1,0 +1,159 @@
+"""Message-passing GNNs: GCN (gcn-cora) and GraphSAGE (graphsage-reddit).
+
+JAX has no native sparse message passing — the SpMM regime is built from
+``jnp.take`` (gather) + ``jax.ops.segment_sum`` over an edge index, which
+IS the system's message-passing substrate (shared with the readability
+engine's bucketing). Two execution modes:
+
+  * ``full``  — full-graph edge-list aggregation (full_graph_sm,
+    ogb_products, molecule shapes). Edges shard over ``data``; partial
+    segment-sums psum across the mesh (GSPMD inserts the collective).
+  * ``sampled`` — GraphSAGE fanout mini-batches as dense
+    (B, f1, f2, d) neighbor tensors from :mod:`repro.graphs.sampler`
+    (minibatch_lg shape) — fixed-shape, pad+mask, TPU-friendly.
+
+Graph batches are dicts (see repro/graphs/format.py).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common
+
+
+@dataclasses.dataclass(frozen=True)
+class GNNConfig:
+    name: str
+    kind: str                    # 'gcn' | 'graphsage'
+    n_layers: int
+    d_in: int
+    d_hidden: int
+    n_classes: int
+    aggregator: str = "mean"
+    norm: str = "sym"            # gcn: symmetric degree normalization
+    sample_sizes: Sequence[int] = ()
+    dtype: Any = jnp.float32
+
+
+def init_gcn_params(cfg: GNNConfig, key):
+    dims = [cfg.d_in] + [cfg.d_hidden] * (cfg.n_layers - 1) + [cfg.n_classes]
+    keys = jax.random.split(key, cfg.n_layers)
+    return {"layers": [
+        {"w": common.dense_init(keys[i], dims[i], dims[i + 1]),
+         "b": jnp.zeros((dims[i + 1],), jnp.float32)}
+        for i in range(cfg.n_layers)]}
+
+
+def init_sage_params(cfg: GNNConfig, key):
+    dims = [cfg.d_in] + [cfg.d_hidden] * (cfg.n_layers - 1) + [cfg.n_classes]
+    keys = jax.random.split(key, 2 * cfg.n_layers)
+    return {"layers": [
+        {"w_self": common.dense_init(keys[2 * i], dims[i], dims[i + 1]),
+         "w_nbr": common.dense_init(keys[2 * i + 1], dims[i], dims[i + 1]),
+         "b": jnp.zeros((dims[i + 1],), jnp.float32)}
+        for i in range(cfg.n_layers)]}
+
+
+# ---------------------------------------------------------------------------
+# full-graph execution (edge lists + segment ops)
+# ---------------------------------------------------------------------------
+
+def _degrees(edge_dst, edge_mask, n_nodes):
+    ones = jnp.where(edge_mask, 1.0, 0.0)
+    return jax.ops.segment_sum(ones, edge_dst, num_segments=n_nodes)
+
+
+def gcn_forward(params, batch, cfg: GNNConfig):
+    """Full-graph GCN: h' = act(D^-1/2 (A + I) D^-1/2 h W)."""
+    x = batch["node_feat"].astype(cfg.dtype)
+    src, dst = batch["edge_src"], batch["edge_dst"]
+    emask = batch["edge_mask"]
+    n = x.shape[0]
+    deg = _degrees(dst, emask, n) + _degrees(src, emask, n)
+    deg = 0.5 * deg if cfg.norm == "sym" else deg  # undirected edge lists
+    # treat stored edges as undirected: aggregate both directions
+    inv_sqrt = jax.lax.rsqrt(jnp.maximum(deg, 0.0) + 1.0)
+
+    for i, layer in enumerate(params["layers"]):
+        h = jnp.einsum("nd,df->nf", x, layer["w"].astype(cfg.dtype))
+        coef = (inv_sqrt[src] * inv_sqrt[dst])[:, None]
+        coef = jnp.where(emask[:, None], coef, 0.0)
+        fwd = jax.ops.segment_sum(h[src] * coef, dst, num_segments=n)
+        bwd = jax.ops.segment_sum(h[dst] * coef, src, num_segments=n)
+        agg = fwd + bwd + h * (inv_sqrt * inv_sqrt)[:, None]  # self loop
+        agg = agg + layer["b"].astype(cfg.dtype)
+        x = jax.nn.relu(agg) if i < len(params["layers"]) - 1 else agg
+    return x
+
+
+def sage_forward_full(params, batch, cfg: GNNConfig):
+    """Full-graph GraphSAGE with mean aggregation over undirected edges."""
+    x = batch["node_feat"].astype(cfg.dtype)
+    src, dst = batch["edge_src"], batch["edge_dst"]
+    emask = batch["edge_mask"]
+    n = x.shape[0]
+    deg = _degrees(dst, emask, n) + _degrees(src, emask, n)
+    inv_deg = jnp.where(deg > 0, 1.0 / jnp.maximum(deg, 1.0), 0.0)
+
+    for i, layer in enumerate(params["layers"]):
+        m = jnp.where(emask[:, None], 1.0, 0.0)
+        mean_nbr = (jax.ops.segment_sum(x[src] * m, dst, num_segments=n)
+                    + jax.ops.segment_sum(x[dst] * m, src, num_segments=n)
+                    ) * inv_deg[:, None]
+        h = (jnp.einsum("nd,df->nf", x, layer["w_self"].astype(cfg.dtype))
+             + jnp.einsum("nd,df->nf", mean_nbr,
+                          layer["w_nbr"].astype(cfg.dtype))
+             + layer["b"].astype(cfg.dtype))
+        x = jax.nn.relu(h) if i < len(params["layers"]) - 1 else h
+    return x
+
+
+# ---------------------------------------------------------------------------
+# sampled execution (dense fanout tensors)
+# ---------------------------------------------------------------------------
+
+def sage_forward_sampled(params, batch, cfg: GNNConfig):
+    """Two-layer GraphSAGE on a sampled fanout block.
+
+    batch: x0 (B, d), x1 (B, f1, d), x2 (B, f1, f2, d) + masks m1 (B, f1),
+    m2 (B, f1, f2). Returns seed logits (B, n_classes).
+    """
+    assert cfg.n_layers == 2, "sampled mode implements the 2-layer config"
+    l1, l2 = params["layers"]
+    x0 = batch["x0"].astype(cfg.dtype)
+    x1 = batch["x1"].astype(cfg.dtype)
+    x2 = batch["x2"].astype(cfg.dtype)
+    m1 = batch["m1"].astype(cfg.dtype)
+    m2 = batch["m2"].astype(cfg.dtype)
+
+    def mean_nbr(xn, mask):
+        s = jnp.sum(xn * mask[..., None], axis=-2)
+        c = jnp.maximum(jnp.sum(mask, axis=-1, keepdims=True), 1.0)
+        return s / c
+
+    def layer(lp, x_self, x_nbr_mean, act=True):
+        h = (jnp.einsum("...d,df->...f", x_self,
+                        lp["w_self"].astype(cfg.dtype))
+             + jnp.einsum("...d,df->...f", x_nbr_mean,
+                          lp["w_nbr"].astype(cfg.dtype))
+             + lp["b"].astype(cfg.dtype))
+        return jax.nn.relu(h) if act else h
+
+    h0 = layer(l1, x0, mean_nbr(x1, m1))              # (B, d_h)
+    h1 = layer(l1, x1, mean_nbr(x2, m2))              # (B, f1, d_h)
+    out = layer(l2, h0, mean_nbr(h1, m1), act=False)  # (B, n_classes)
+    return out
+
+
+def node_classification_loss(logits, labels, mask):
+    """Masked softmax cross entropy + accuracy."""
+    mask = mask.astype(jnp.float32)
+    loss = common.softmax_xent(logits, jnp.maximum(labels, 0), mask)
+    pred = jnp.argmax(logits, axis=-1)
+    acc = jnp.sum((pred == labels) * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return loss, acc

@@ -1,0 +1,159 @@
+"""xDeepFM (arXiv:1803.05170): sparse embeddings + CIN + DNN.
+
+JAX has no native EmbeddingBag or CSR sparse — the lookup substrate here
+is built from ``jnp.take`` + ``jax.ops.segment_sum`` (the same
+gather/segment machinery as the GNN message passing and the readability
+grid bucketing). The single flat embedding table (heavy-tailed per-field
+vocabs concatenated with offsets) is the hot path; it row-shards over the
+``model`` axis (GSPMD gather baseline; the hand-written shard_map
+range-partition lookup lives in repro/distributed/embedding.py).
+
+Heads:
+  * ``xdeepfm_logits`` — CTR logit: linear + CIN + DNN (train_batch,
+    serve_p99, serve_bulk shapes).
+  * ``retrieval_scores`` — two-tower retrieval head reusing the xDeepFM
+    user tower against an item-embedding matrix: one (1, d) x (d, 1M)
+    GEMM (retrieval_cand shape).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import common
+
+
+@dataclasses.dataclass(frozen=True)
+class XDeepFMConfig:
+    name: str
+    field_vocabs: Sequence[int]          # per-field vocabulary sizes
+    embed_dim: int = 10
+    cin_layers: Sequence[int] = (200, 200, 200)
+    mlp_dims: Sequence[int] = (400, 400)
+    retrieval_dim: int = 128
+    n_items: int = 1_000_000
+    dtype: Any = jnp.float32
+
+    @property
+    def n_fields(self):
+        return len(self.field_vocabs)
+
+    @property
+    def total_vocab(self):
+        return int(sum(self.field_vocabs))
+
+    @property
+    def field_offsets(self):
+        return np.concatenate([[0], np.cumsum(self.field_vocabs)[:-1]])
+
+
+def embedding_bag(table, ids, bag_ids, n_bags, *, weights=None,
+                  combine: str = "mean"):
+    """EmbeddingBag from gather + segment ops (torch.nn.EmbeddingBag
+    analogue). ids/bag_ids: (nnz,); returns (n_bags, d)."""
+    rows = jnp.take(table, ids, axis=0)
+    if weights is not None:
+        rows = rows * weights[:, None]
+    s = jax.ops.segment_sum(rows, bag_ids, num_segments=n_bags)
+    if combine == "sum":
+        return s
+    if combine == "max":
+        return jax.ops.segment_max(rows, bag_ids, num_segments=n_bags)
+    cnt = jax.ops.segment_sum(jnp.ones_like(bag_ids, dtype=rows.dtype),
+                              bag_ids, num_segments=n_bags)
+    return s / jnp.maximum(cnt, 1.0)[:, None]
+
+
+def init_xdeepfm_params(cfg: XDeepFMConfig, key):
+    keys = jax.random.split(key, 8 + len(cfg.cin_layers)
+                            + len(cfg.mlp_dims))
+    ki = iter(keys)
+    m, D = cfg.n_fields, cfg.embed_dim
+    params = {
+        "embed": common.truncated_normal(next(ki), (cfg.total_vocab, D),
+                                         0.01),
+        "linear": common.truncated_normal(next(ki), (cfg.total_vocab,),
+                                          0.01),
+        "bias": jnp.zeros(()),
+    }
+    # CIN: W^k (H_k, H_{k-1}, m)
+    h_prev = m
+    cin = []
+    for h in cfg.cin_layers:
+        cin.append(common.truncated_normal(next(ki), (h, h_prev, m),
+                                           (h_prev * m) ** -0.5))
+        h_prev = h
+    params["cin"] = cin
+    params["cin_out"] = common.dense_init(next(ki),
+                                          int(sum(cfg.cin_layers)), 1)
+    dims = [m * D] + list(cfg.mlp_dims)
+    params["mlp"] = [
+        {"w": common.dense_init(next(ki), dims[i], dims[i + 1]),
+         "b": jnp.zeros((dims[i + 1],))}
+        for i in range(len(cfg.mlp_dims))]
+    params["mlp_out"] = common.dense_init(next(ki), dims[-1], 1)
+    # retrieval two-tower head
+    params["user_proj"] = common.dense_init(next(ki), dims[-1],
+                                            cfg.retrieval_dim)
+    params["item_embed"] = common.truncated_normal(
+        next(ki), (cfg.n_items, cfg.retrieval_dim), 0.02)
+    return params
+
+
+def _lookup(params, ids, cfg: XDeepFMConfig):
+    """ids: (B, n_fields) global (offset) ids -> (B, n_fields, D)."""
+    return jnp.take(params["embed"], ids, axis=0).astype(cfg.dtype)
+
+
+def _cin(x0, params, cfg: XDeepFMConfig):
+    """Compressed Interaction Network. x0: (B, m, D)."""
+    outs = []
+    xk = x0
+    for w in params["cin"]:
+        # X^{k+1}_h = sum_{i,j} W_{h,j,i} (X^k_j o X^0_i)
+        xk = jnp.einsum("bjd,bid,hji->bhd", xk, x0, w.astype(cfg.dtype))
+        outs.append(jnp.sum(xk, axis=-1))                  # sum-pool over D
+    p = jnp.concatenate(outs, axis=-1)                     # (B, sum H_k)
+    return jnp.einsum("bh,ho->bo", p, params["cin_out"].astype(cfg.dtype))[:, 0]
+
+
+def _dnn(x0, params, cfg: XDeepFMConfig):
+    h = x0.reshape(x0.shape[0], -1)
+    for lp in params["mlp"]:
+        h = jax.nn.relu(h @ lp["w"].astype(cfg.dtype)
+                        + lp["b"].astype(cfg.dtype))
+    return h
+
+
+def xdeepfm_logits(params, ids, cfg: XDeepFMConfig):
+    """ids: (B, n_fields) int32 offset ids -> CTR logits (B,)."""
+    x0 = _lookup(params, ids, cfg)
+    linear = jnp.sum(jnp.take(params["linear"], ids, axis=0), axis=-1)
+    cin = _cin(x0, params, cfg)
+    h = _dnn(x0, params, cfg)
+    dnn = jnp.einsum("bh,ho->bo", h, params["mlp_out"].astype(cfg.dtype))[:, 0]
+    return linear.astype(jnp.float32) + cin.astype(jnp.float32) \
+        + dnn.astype(jnp.float32) + params["bias"]
+
+
+def retrieval_scores(params, ids, cfg: XDeepFMConfig):
+    """Score one (or few) query rows against the full item matrix.
+
+    ids: (B, n_fields) -> (B, n_items) scores; a single GEMM against the
+    model-sharded item table — never a loop over candidates.
+    """
+    x0 = _lookup(params, ids, cfg)
+    h = _dnn(x0, params, cfg)
+    u = h @ params["user_proj"].astype(cfg.dtype)           # (B, dr)
+    return jnp.einsum("bd,nd->bn", u, params["item_embed"].astype(cfg.dtype))
+
+
+def bce_loss(logits, labels):
+    logits = logits.astype(jnp.float32)
+    return jnp.mean(jnp.maximum(logits, 0.0) - logits * labels
+                    + jnp.log1p(jnp.exp(-jnp.abs(logits))))

@@ -1,0 +1,580 @@
+"""Decoder-only transformer LM family (dense + MoE), pure JAX.
+
+Covers the five assigned LM architectures: GQA (with Megatron-style TP
+head padding / kv replication), optional qk-norm (qwen3), qkv bias
+(qwen1.5 family), RoPE with per-arch theta, SwiGLU FFN, GShard-style
+top-k MoE with capacity + shared experts (qwen2-moe, llama4-scout), and
+llama4 iRoPE chunked-local attention with periodic NoPE global layers.
+
+Structure notes:
+  * layers run under ``lax.scan`` over stacked params (+ ``jax.checkpoint``)
+    so HLO size and remat memory are depth-independent;
+  * attention is query-chunked (``lax.map``) so the score tile is
+    (B, H, q_chunk, S) — the 32k-prefill memory fix;
+  * the LM head loss is sequence-chunked (never materializes the full
+    (tokens, vocab) logits);
+  * MoE uses einsum dispatch with per-slot accumulation (peak memory
+    tokens x E x C once, not k times).
+
+Sharding intent (enforced via in_shardings in launch/):
+  batch -> (pod?, data); heads / d_ff / experts / vocab -> model;
+  decode KV cache: batch -> data, seq -> model (flash-decoding style
+  softmax-merge collectives are inserted by GSPMD; the hand-written
+  shard_map merge lives in repro/distributed/collectives.py).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models import common
+from repro.distributed.sharding import pad_heads, round_up
+
+
+@dataclasses.dataclass(frozen=True)
+class TransformerConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_head: int
+    d_ff: int
+    vocab_size: int
+    qk_norm: bool = False
+    qkv_bias: bool = False
+    rope_theta: float = 1e6
+    # MoE (n_experts == 0 -> dense FFN)
+    n_experts: int = 0
+    n_shared_experts: int = 0
+    top_k: int = 1
+    expert_d_ff: int = 0
+    capacity_factor: float = 1.25
+    moe_group: int = 512
+    router_aux_weight: float = 0.01
+    # attention variants
+    attn_chunk: int = 0          # >0: iRoPE chunked-local attention
+    global_interval: int = 0     # every k-th layer global (0 = all local)
+    nope_on_global: bool = True  # llama4: global layers skip RoPE
+    # numerics / training
+    dtype: Any = jnp.bfloat16
+    z_loss: float = 1e-4
+    loss_chunks: int = 16
+    q_chunk: int = 1024          # attention query chunk
+    remat: bool = True
+    scan_layers: bool = True     # False: Python loop (roofline twins)
+    # beyond-paper perf knobs (EXPERIMENTS.md SPerf cell B):
+    sp_activations: bool = False   # Megatron-SP residual sharding hint
+    moe_hints: bool = False        # expert-parallel resharding hints
+    # TP-derived padded sizes (filled by `with_mesh`)
+    n_heads_p: int = 0
+    vocab_p: int = 0
+    n_experts_p: int = 0
+
+    @property
+    def moe(self) -> bool:
+        return self.n_experts > 0
+
+    def with_mesh(self, model_axis: int) -> "TransformerConfig":
+        return dataclasses.replace(
+            self,
+            n_heads_p=pad_heads(self.n_heads, model_axis),
+            vocab_p=round_up(self.vocab_size, model_axis),
+            n_experts_p=round_up(self.n_experts, model_axis)
+            if self.moe else 0,
+        )
+
+    def ensure_padded(self) -> "TransformerConfig":
+        return self if self.n_heads_p else self.with_mesh(1)
+
+    def param_count(self) -> int:
+        cfg = self.ensure_padded()
+        d, dh = cfg.d_model, cfg.d_head
+        attn = d * (cfg.n_heads * dh + 2 * cfg.n_kv_heads * dh) \
+            + cfg.n_heads * dh * d
+        if cfg.moe:
+            ffn = 3 * cfg.n_experts * d * cfg.expert_d_ff \
+                + 3 * d * cfg.expert_d_ff * cfg.n_shared_experts \
+                + d * cfg.n_experts
+        else:
+            ffn = 3 * d * cfg.d_ff
+        return cfg.n_layers * (attn + ffn) + 2 * cfg.vocab_size * d
+
+    def active_param_count(self) -> int:
+        cfg = self.ensure_padded()
+        if not cfg.moe:
+            return cfg.param_count()
+        d = cfg.d_model
+        dh = cfg.d_head
+        attn = d * (cfg.n_heads * dh + 2 * cfg.n_kv_heads * dh) \
+            + cfg.n_heads * dh * d
+        ffn = 3 * cfg.top_k * d * cfg.expert_d_ff \
+            + 3 * d * cfg.expert_d_ff * cfg.n_shared_experts \
+            + d * cfg.n_experts
+        return cfg.n_layers * (attn + ffn) + 2 * cfg.vocab_size * d
+
+
+# ---------------------------------------------------------------------------
+# parameters
+# ---------------------------------------------------------------------------
+
+def init_params(cfg: TransformerConfig, key) -> dict:
+    cfg = cfg.ensure_padded()
+    keys = iter(jax.random.split(key, 32))
+    d, dh = cfg.d_model, cfg.d_head
+    L = cfg.n_layers
+    Hp, Kv = cfg.n_heads_p, cfg.n_kv_heads
+    layers = {
+        "ln1": jnp.zeros((L, d), jnp.float32),
+        "ln2": jnp.zeros((L, d), jnp.float32),
+        "wq": common.dense_init(next(keys), d, Hp * dh, extra_leading=(L,)),
+        "wk": common.dense_init(next(keys), d, Kv * dh, extra_leading=(L,)),
+        "wv": common.dense_init(next(keys), d, Kv * dh, extra_leading=(L,)),
+        "wo": common.dense_init(next(keys), Hp * dh, d, extra_leading=(L,)),
+    }
+    if cfg.qkv_bias:
+        layers["bq"] = jnp.zeros((L, Hp * dh), jnp.float32)
+        layers["bk"] = jnp.zeros((L, Kv * dh), jnp.float32)
+        layers["bv"] = jnp.zeros((L, Kv * dh), jnp.float32)
+    if cfg.qk_norm:
+        layers["q_norm"] = jnp.zeros((L, dh), jnp.float32)
+        layers["k_norm"] = jnp.zeros((L, dh), jnp.float32)
+    if cfg.moe:
+        Ep, ffe = cfg.n_experts_p, cfg.expert_d_ff
+        layers["router"] = common.dense_init(next(keys), d, Ep,
+                                             extra_leading=(L,))
+        layers["we_gate"] = common.dense_init(next(keys), d, ffe,
+                                              extra_leading=(L, Ep))
+        layers["we_up"] = common.dense_init(next(keys), d, ffe,
+                                            extra_leading=(L, Ep))
+        layers["we_down"] = common.dense_init(next(keys), ffe, d,
+                                              extra_leading=(L, Ep))
+        if cfg.n_shared_experts:
+            ffs = cfg.n_shared_experts * ffe
+            layers["ws_gate"] = common.dense_init(next(keys), d, ffs,
+                                                  extra_leading=(L,))
+            layers["ws_up"] = common.dense_init(next(keys), d, ffs,
+                                                extra_leading=(L,))
+            layers["ws_down"] = common.dense_init(next(keys), ffs, d,
+                                                  extra_leading=(L,))
+    else:
+        layers["w_gate"] = common.dense_init(next(keys), d, cfg.d_ff,
+                                             extra_leading=(L,))
+        layers["w_up"] = common.dense_init(next(keys), d, cfg.d_ff,
+                                           extra_leading=(L,))
+        layers["w_down"] = common.dense_init(next(keys), cfg.d_ff, d,
+                                             extra_leading=(L,))
+    embed = common.truncated_normal(next(keys), (cfg.vocab_p, d), 0.02)
+    # padded vocab rows stay zero
+    embed = embed.at[cfg.vocab_size:].set(0.0)
+    unembed = common.truncated_normal(next(keys), (d, cfg.vocab_p),
+                                      d ** -0.5)
+    unembed = unembed.at[:, cfg.vocab_size:].set(0.0)
+    return {"embed": embed, "layers": layers,
+            "ln_f": jnp.zeros((d,), jnp.float32), "unembed": unembed}
+
+
+# ---------------------------------------------------------------------------
+# attention
+# ---------------------------------------------------------------------------
+
+def _layer_uses_rope(cfg: TransformerConfig, is_global):
+    if cfg.attn_chunk and cfg.nope_on_global:
+        return ~is_global
+    return jnp.asarray(True)
+
+
+def _qkv(x, layer, cfg: TransformerConfig):
+    c = lambda a: a.astype(cfg.dtype)
+    B, S, d = x.shape
+    dh, Hp, Kv = cfg.d_head, cfg.n_heads_p, cfg.n_kv_heads
+    q = jnp.einsum("bsd,dh->bsh", x, c(layer["wq"]))
+    k = jnp.einsum("bsd,dh->bsh", x, c(layer["wk"]))
+    v = jnp.einsum("bsd,dh->bsh", x, c(layer["wv"]))
+    if cfg.qkv_bias:
+        q = q + c(layer["bq"])
+        k = k + c(layer["bk"])
+        v = v + c(layer["bv"])
+    q = q.reshape(B, S, Hp, dh)
+    k = k.reshape(B, S, Kv, dh)
+    v = v.reshape(B, S, Kv, dh)
+    if cfg.qk_norm:
+        q = common.rms_norm(q, layer["q_norm"])
+        k = common.rms_norm(k, layer["k_norm"])
+    return q, k, v
+
+
+def _attend_chunked(q, k, v, cfg: TransformerConfig, *, q_positions,
+                    kv_positions, is_global):
+    """Query-chunked masked attention.
+
+    q: (B, S, Hp, dh); k/v: (B, T, Kv, dh). Causal + (optionally)
+    chunked-local mask; ``is_global`` switches a local layer to global.
+    Returns (B, S, Hp, dh).
+    """
+    B, S, Hp, dh = q.shape
+    T = k.shape[1]
+    Kv = k.shape[2]
+    G = Hp // Kv
+    q = q.reshape(B, S, Kv, G, dh)
+    n_chunks = max(S // cfg.q_chunk, 1)
+    Cq = S // n_chunks
+    scale = dh ** -0.5
+
+    def chunk_fn(ci):
+        qc = lax.dynamic_slice_in_dim(q, ci * Cq, Cq, axis=1)
+        qp = lax.dynamic_slice_in_dim(q_positions, ci * Cq, Cq, axis=0)
+        scores = jnp.einsum("bckgd,btkd->bkgct", qc, k) * scale
+        mask = kv_positions[None, :] <= qp[:, None]            # causal
+        if cfg.attn_chunk:
+            same = (kv_positions[None, :] // cfg.attn_chunk) \
+                == (qp[:, None] // cfg.attn_chunk)
+            mask = mask & jnp.where(is_global, True, same)
+        scores = jnp.where(mask[None, None, None], scores.astype(jnp.float32),
+                           -1e30)
+        probs = jax.nn.softmax(scores, axis=-1).astype(cfg.dtype)
+        return jnp.einsum("bkgct,btkd->bckgd", probs, v)
+
+    outs = lax.map(chunk_fn, jnp.arange(n_chunks))
+    out = jnp.moveaxis(outs, 0, 1).reshape(B, S, Kv, G, dh)
+    return out.reshape(B, S, Hp, dh)
+
+
+def _attend_decode(q, k_cache, v_cache, cfg: TransformerConfig, *, pos,
+                   is_global):
+    """Single-token attention against the (possibly sharded) KV cache.
+
+    q: (B, 1, Hp, dh); caches: (B, Smax, Kv, dh). With the cache sequence
+    dim sharded, GSPMD turns the fp32 softmax + weighted sum into the
+    flash-decoding merge (partial max/sum all-reduce).
+    """
+    B, _, Hp, dh = q.shape
+    Smax, Kv = k_cache.shape[1], k_cache.shape[2]
+    G = Hp // Kv
+    qg = q.reshape(B, Kv, G, dh)
+    scores = jnp.einsum("bkgd,btkd->bkgt", qg, k_cache) * (dh ** -0.5)
+    t = jnp.arange(Smax, dtype=jnp.int32)
+    mask = t[None] <= pos
+    if cfg.attn_chunk:
+        same = (t // cfg.attn_chunk) == (pos // cfg.attn_chunk)
+        mask = mask & jnp.where(is_global, True, same)
+    scores = jnp.where(mask[:, None, None], scores.astype(jnp.float32), -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(cfg.dtype)
+    out = jnp.einsum("bkgt,btkd->bkgd", probs, v_cache)
+    return out.reshape(B, 1, Hp * dh)
+
+
+# ---------------------------------------------------------------------------
+# FFN / MoE
+# ---------------------------------------------------------------------------
+
+def _sp_constraint(x, cfg):
+    """Sequence-parallel residual hint: shard the seq dim over 'model'
+    between blocks (LN/elementwise become local; GSPMD turns the TP
+    boundary all-reduces into reduce-scatter + all-gather pairs)."""
+    if not cfg.sp_activations:
+        return x
+    from jax.sharding import PartitionSpec as P
+    U = P.UNCONSTRAINED
+    return jax.lax.with_sharding_constraint(x, P(U, "model", U))
+
+
+def _dense_ffn(x, layer, cfg):
+    c = lambda a: a.astype(cfg.dtype)
+    return common.swiglu(x, c(layer["w_gate"]), c(layer["w_up"]),
+                         c(layer["w_down"]))
+
+
+def _moe_ffn(x, layer, cfg: TransformerConfig):
+    """GShard-style top-k capacity MoE. x: (B, S, d) -> (out, aux_loss)."""
+    c = lambda a: a.astype(cfg.dtype)
+    B, S, d = x.shape
+    T = B * S
+    group = min(cfg.moe_group, T)
+    G = T // group
+    assert G * group == T, (T, group)
+    E = cfg.n_experts_p
+    k = cfg.top_k
+    cap = max(int(group * k * cfg.capacity_factor / E), 1)
+    cap = round_up(cap, 4)
+
+    xg = x.reshape(G, group, d)
+    logits = jnp.einsum("gsd,de->gse", xg, c(layer["router"])
+                        ).astype(jnp.float32)
+    # mask padded experts out of routing
+    eids = jnp.arange(E)
+    logits = jnp.where(eids[None, None, :] < cfg.n_experts, logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, top_idx = lax.top_k(probs, k)                 # (G, S, k)
+    gate_vals = gate_vals / jnp.maximum(
+        jnp.sum(gate_vals, -1, keepdims=True), 1e-9)
+
+    # capacity ranks computed slot-major (slot 0 has priority)
+    oh = jax.nn.one_hot(top_idx, E, dtype=jnp.float32)        # (G, S, k, E)
+    oh_slot = jnp.moveaxis(oh, 2, 1)                          # (G, k, S, E)
+    flat = oh_slot.reshape(G, k * group, E)
+    ranks = jnp.cumsum(flat, axis=1) - flat                   # rank at slot
+    ranks = jnp.sum(ranks * flat, axis=-1)                    # (G, k*S)
+    ranks = jnp.moveaxis(ranks.reshape(G, k, group), 1, 2)    # (G, S, k)
+    keep = (ranks < cap)
+
+    dispatch = jnp.zeros((G, group, E, cap), cfg.dtype)
+    combine = jnp.zeros((G, group, E, cap), jnp.float32)
+    for slot in range(k):
+        oh_e = oh[:, :, slot, :] * keep[:, :, slot, None]     # (G, S, E)
+        oh_c = jax.nn.one_hot(ranks[:, :, slot], cap, dtype=jnp.float32)
+        d4 = jnp.einsum("gse,gsc->gsec", oh_e, oh_c)
+        dispatch = dispatch + d4.astype(cfg.dtype)
+        combine = combine + d4 * gate_vals[:, :, slot, None, None]
+    if cfg.moe_hints:
+        from jax.sharding import PartitionSpec as P
+        U = P.UNCONSTRAINED
+        dispatch = jax.lax.with_sharding_constraint(
+            dispatch, P(U, U, "model", U))
+        combine = jax.lax.with_sharding_constraint(
+            combine, P(U, U, "model", U))
+
+    expert_in = jnp.einsum("gsec,gsd->egcd", dispatch, xg)
+    if cfg.moe_hints:
+        from jax.sharding import PartitionSpec as P
+        U = P.UNCONSTRAINED
+        expert_in = jax.lax.with_sharding_constraint(
+            expert_in, P("model", U, U, U))
+    h_gate = jnp.einsum("egcd,edf->egcf", expert_in, c(layer["we_gate"]))
+    h_up = jnp.einsum("egcd,edf->egcf", expert_in, c(layer["we_up"]))
+    expert_out = jnp.einsum("egcf,efd->egcd",
+                            jax.nn.silu(h_gate) * h_up, c(layer["we_down"]))
+    if cfg.moe_hints:
+        from jax.sharding import PartitionSpec as P
+        U = P.UNCONSTRAINED
+        expert_out = jax.lax.with_sharding_constraint(
+            expert_out, P("model", U, U, U))
+    y = jnp.einsum("egcd,gsec->gsd", expert_out,
+                   combine.astype(cfg.dtype))
+    y = y.reshape(B, S, d)
+
+    if cfg.n_shared_experts:
+        y = y + common.swiglu(x, c(layer["ws_gate"]), c(layer["ws_up"]),
+                              c(layer["ws_down"]))
+
+    # Switch-style load-balance aux loss over real experts
+    me = jnp.mean(probs, axis=(0, 1))                         # (E,)
+    fe = jnp.mean(oh[:, :, 0, :], axis=(0, 1))                # top-1 fraction
+    aux = cfg.n_experts * jnp.sum(me * fe)
+    return y, aux
+
+
+# ---------------------------------------------------------------------------
+# forward passes
+# ---------------------------------------------------------------------------
+
+def _layer_flags(cfg: TransformerConfig):
+    """(L,) bool: which layers use global attention (llama4 iRoPE)."""
+    L = cfg.n_layers
+    if cfg.attn_chunk and cfg.global_interval:
+        ids = jnp.arange(L)
+        return (ids % cfg.global_interval) == (cfg.global_interval - 1)
+    if cfg.attn_chunk:
+        return jnp.zeros((L,), bool)
+    return jnp.ones((L,), bool)
+
+
+def _embed(params, tokens, cfg):
+    return jnp.take(params["embed"], tokens, axis=0).astype(cfg.dtype)
+
+
+def _lm_logits(params, x, cfg):
+    logits = jnp.einsum("td,dv->tv", x, params["unembed"].astype(cfg.dtype))
+    vmask = jnp.arange(cfg.vocab_p) < cfg.vocab_size
+    return jnp.where(vmask[None, :], logits, -1e30)
+
+
+def forward(params, tokens, cfg: TransformerConfig):
+    """Full forward to final hidden states. tokens: (B, S) -> (B, S, d)."""
+    cfg = cfg.ensure_padded()
+    B, S = tokens.shape
+    x = _embed(params, tokens, cfg)
+    positions = jnp.arange(S, dtype=jnp.int32)
+    flags = _layer_flags(cfg)
+
+    def block(x, layer_and_flag):
+        layer, is_global = layer_and_flag
+        h = common.rms_norm(x, layer["ln1"])
+        q, k, v = _qkv(h, layer, cfg)
+        use_rope = _layer_uses_rope(cfg, is_global)
+        q = jnp.where(use_rope,
+                      common.apply_rope(q, positions[None], cfg.rope_theta), q)
+        k = jnp.where(use_rope,
+                      common.apply_rope(k, positions[None], cfg.rope_theta), k)
+        attn = _attend_chunked(q, k, v, cfg, q_positions=positions,
+                               kv_positions=positions, is_global=is_global)
+        attn = attn.reshape(B, S, -1)
+        x = x + jnp.einsum("bsh,hd->bsd", attn,
+                           layer["wo"].astype(cfg.dtype))
+        h2 = common.rms_norm(x, layer["ln2"])
+        if cfg.moe:
+            ffn, aux = _moe_ffn(h2, layer, cfg)
+        else:
+            ffn, aux = _dense_ffn(h2, layer, cfg), jnp.zeros((), jnp.float32)
+        return (_sp_constraint(x + ffn, cfg), aux)
+
+    def body(carry, layer_and_flag):
+        x, aux_sum = carry
+        x, aux = (jax.checkpoint(block) if cfg.remat else block)(
+            x, layer_and_flag)
+        return (x, aux_sum + aux), None
+
+    if cfg.scan_layers:
+        (x, aux_sum), _ = lax.scan(body, (x, jnp.zeros((), jnp.float32)),
+                                   (params["layers"], flags))
+    else:
+        aux_sum = jnp.zeros((), jnp.float32)
+        for i in range(cfg.n_layers):
+            layer_i = jax.tree.map(lambda a: a[i], params["layers"])
+            (x, aux_sum), _ = body((x, aux_sum), (layer_i, flags[i]))
+    x = common.rms_norm(x, params["ln_f"])
+    return x, aux_sum
+
+
+def loss_fn(params, batch, cfg: TransformerConfig):
+    """Causal LM loss. batch: {'tokens': (B,S), 'labels': (B,S)} with -1
+    label = masked."""
+    cfg = cfg.ensure_padded()
+    x, aux = forward(params, batch["tokens"], cfg)
+    B, S, d = x.shape
+    xt = x.reshape(B * S, d)
+    labels = jnp.maximum(batch["labels"].reshape(-1), 0)
+    mask = (batch["labels"].reshape(-1) >= 0).astype(jnp.float32)
+    loss, count = common.chunked_softmax_xent(
+        lambda xc: _lm_logits(params, xc, cfg), xt, labels, mask,
+        n_chunks=cfg.loss_chunks, z_loss=cfg.z_loss)
+    total = loss + cfg.router_aux_weight * aux / max(cfg.n_layers, 1)
+    return total, {"xent": loss, "aux": aux, "tokens": count}
+
+
+# ---------------------------------------------------------------------------
+# serving: prefill + decode with KV cache
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: TransformerConfig, batch: int, max_len: int):
+    cfg = cfg.ensure_padded()
+    shape = (cfg.n_layers, batch, max_len, cfg.n_kv_heads, cfg.d_head)
+    return {"k": jnp.zeros(shape, cfg.dtype),
+            "v": jnp.zeros(shape, cfg.dtype),
+            "pos": jnp.zeros((), jnp.int32)}
+
+
+def prefill(params, tokens, cache, cfg: TransformerConfig):
+    """Run the prompt through the model, filling the cache.
+
+    Returns (updated cache, last-position logits (B, vocab_p))."""
+    cfg = cfg.ensure_padded()
+    B, S = tokens.shape
+    x = _embed(params, tokens, cfg)
+    positions = jnp.arange(S, dtype=jnp.int32)
+    flags = _layer_flags(cfg)
+    Smax = cache["k"].shape[2]
+
+    def block(x, layer_flag_cache):
+        layer, is_global, ck, cv = layer_flag_cache
+        h = common.rms_norm(x, layer["ln1"])
+        q, k, v = _qkv(h, layer, cfg)
+        use_rope = _layer_uses_rope(cfg, is_global)
+        q = jnp.where(use_rope,
+                      common.apply_rope(q, positions[None], cfg.rope_theta), q)
+        k = jnp.where(use_rope,
+                      common.apply_rope(k, positions[None], cfg.rope_theta), k)
+        ck = lax.dynamic_update_slice(ck, k, (0, 0, 0, 0))
+        cv = lax.dynamic_update_slice(cv, v, (0, 0, 0, 0))
+        attn = _attend_chunked(q, k, v, cfg, q_positions=positions,
+                               kv_positions=positions, is_global=is_global)
+        attn = attn.reshape(B, S, -1)
+        x = x + jnp.einsum("bsh,hd->bsd", attn, layer["wo"].astype(cfg.dtype))
+        h2 = common.rms_norm(x, layer["ln2"])
+        if cfg.moe:
+            ffn, _ = _moe_ffn(h2, layer, cfg)
+        else:
+            ffn = _dense_ffn(h2, layer, cfg)
+        return x + ffn, (ck, cv)
+
+    def body(x, scanned):
+        layer, flag, ck, cv = scanned
+        fn = jax.checkpoint(block) if cfg.remat else block
+        x, new_cache = fn(x, (layer, flag, ck, cv))
+        return x, new_cache
+
+    if cfg.scan_layers:
+        x, (ck, cv) = lax.scan(
+            body, x, (params["layers"], flags, cache["k"], cache["v"]))
+    else:
+        cks, cvs = [], []
+        for i in range(cfg.n_layers):
+            layer_i = jax.tree.map(lambda a: a[i], params["layers"])
+            x, (ck_i, cv_i) = body(
+                x, (layer_i, flags[i], cache["k"][i], cache["v"][i]))
+            cks.append(ck_i)
+            cvs.append(cv_i)
+        ck = jnp.stack(cks)
+        cv = jnp.stack(cvs)
+    x = common.rms_norm(x, params["ln_f"])
+    logits = _lm_logits(params, x[:, -1], cfg)
+    return {"k": ck, "v": cv, "pos": jnp.asarray(S, jnp.int32)}, logits
+
+
+def decode_step(params, tokens, cache, cfg: TransformerConfig):
+    """One decode step. tokens: (B,) last sampled ids.
+
+    Returns (next_token_ids (B,), logits (B, vocab_p), updated cache)."""
+    cfg = cfg.ensure_padded()
+    B = tokens.shape[0]
+    pos = cache["pos"]
+    x = _embed(params, tokens[:, None], cfg)                  # (B, 1, d)
+    flags = _layer_flags(cfg)
+    posb = jnp.full((B, 1), pos, jnp.int32)
+
+    def block(x, scanned):
+        layer, is_global, ck, cv = scanned
+        h = common.rms_norm(x, layer["ln1"])
+        q, k, v = _qkv(h, layer, cfg)
+        use_rope = _layer_uses_rope(cfg, is_global)
+        q = jnp.where(use_rope, common.apply_rope(q, posb, cfg.rope_theta), q)
+        k = jnp.where(use_rope, common.apply_rope(k, posb, cfg.rope_theta), k)
+        ck = lax.dynamic_update_slice(ck, k, (0, pos, 0, 0))
+        cv = lax.dynamic_update_slice(cv, v, (0, pos, 0, 0))
+        attn = _attend_decode(q, ck, cv, cfg, pos=pos, is_global=is_global)
+        x = x + jnp.einsum("bsh,hd->bsd", attn,
+                           layer["wo"].astype(cfg.dtype))
+        h2 = common.rms_norm(x, layer["ln2"])
+        if cfg.moe:
+            ffn, _ = _moe_ffn(h2, layer, cfg)
+        else:
+            ffn = _dense_ffn(h2, layer, cfg)
+        return x + ffn, (ck, cv)
+
+    def body(x, scanned):
+        return block(x, scanned)
+
+    if cfg.scan_layers:
+        x, (ck, cv) = lax.scan(
+            body, x, (params["layers"], flags, cache["k"], cache["v"]))
+    else:
+        cks, cvs = [], []
+        for i in range(cfg.n_layers):
+            layer_i = jax.tree.map(lambda a: a[i], params["layers"])
+            x, (ck_i, cv_i) = body(
+                x, (layer_i, flags[i], cache["k"][i], cache["v"][i]))
+            cks.append(ck_i)
+            cvs.append(cv_i)
+        ck = jnp.stack(cks)
+        cv = jnp.stack(cvs)
+    x = common.rms_norm(x, params["ln_f"])
+    logits = _lm_logits(params, x[:, 0], cfg)
+    next_ids = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    new_cache = {"k": ck, "v": cv, "pos": pos + 1}
+    return next_ids, logits, new_cache

@@ -1,0 +1,93 @@
+"""Equivariance properties: per-graph energies must be invariant under
+global rotations + translations; features must transform covariantly."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import so3
+from repro.models.equivariant import (EquiformerConfig, NequIPConfig,
+                                      equiformer_forward,
+                                      init_equiformer_params,
+                                      init_nequip_params, nequip_forward)
+
+
+def molecule_batch(seed, n=20, e=64):
+    rng = np.random.default_rng(seed)
+    return {
+        "positions": jnp.asarray(rng.normal(size=(n, 3)).astype(np.float32)),
+        "species": jnp.asarray(rng.integers(0, 4, n).astype(np.int32)),
+        "edge_src": jnp.asarray(rng.integers(0, n, e).astype(np.int32)),
+        "edge_dst": jnp.asarray(rng.integers(0, n, e).astype(np.int32)),
+        "edge_mask": jnp.asarray(rng.random(e) > 0.1),
+        "node_mask": jnp.ones(n, bool),
+        "graph_id": jnp.zeros(n, jnp.int32),
+    }
+
+
+def random_rotation(seed):
+    rng = np.random.default_rng(seed)
+    a, b, g = rng.uniform(-np.pi, np.pi, 3)
+    return (so3._rot_z(a) @ so3._rot_y(b) @ so3._rot_z(g)).astype(np.float32)
+
+
+@pytest.mark.parametrize("seed", [0, 1])
+def test_nequip_energy_rotation_invariant(seed):
+    cfg = NequIPConfig(name="nequip-test", n_layers=3, d_hidden=8,
+                       edge_chunk=64)
+    params = init_nequip_params(cfg, jax.random.PRNGKey(seed))
+    batch = molecule_batch(seed)
+    e0 = nequip_forward(params, batch, cfg)
+    R = random_rotation(seed + 7)
+    t = jnp.asarray([1.5, -2.0, 0.25])
+    rb = dict(batch, positions=batch["positions"] @ R.T + t)
+    e1 = nequip_forward(params, rb, cfg)
+    np.testing.assert_allclose(np.asarray(e0), np.asarray(e1),
+                               rtol=2e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("seed", [0, 1])
+def test_equiformer_energy_rotation_invariant(seed):
+    cfg = EquiformerConfig(name="eqv2-test", n_layers=2, d_hidden=16,
+                           l_max=4, m_max=2, n_heads=4, edge_chunk=32)
+    params = init_equiformer_params(cfg, jax.random.PRNGKey(seed))
+    batch = molecule_batch(seed + 3)
+    e0 = equiformer_forward(params, batch, cfg)
+    R = random_rotation(seed + 11)
+    t = jnp.asarray([-0.5, 3.0, 1.0])
+    rb = dict(batch, positions=batch["positions"] @ R.T + t)
+    e1 = equiformer_forward(params, rb, cfg)
+    np.testing.assert_allclose(np.asarray(e0), np.asarray(e1),
+                               rtol=2e-4, atol=1e-4)
+
+
+def test_nequip_forces_finite():
+    # energy is differentiable wrt positions (forces = -dE/dpos)
+    cfg = NequIPConfig(name="nequip-test", n_layers=2, d_hidden=8,
+                       edge_chunk=64)
+    params = init_nequip_params(cfg, jax.random.PRNGKey(0))
+    batch = molecule_batch(5)
+
+    def energy(pos):
+        return nequip_forward(params, dict(batch, positions=pos), cfg).sum()
+
+    forces = -jax.grad(energy)(batch["positions"])
+    assert forces.shape == batch["positions"].shape
+    assert bool(jnp.all(jnp.isfinite(forces)))
+
+
+def test_so2_truncation_zeroes_high_m():
+    # eSCN: after the SO(2) conv in the aligned frame, |m| > m_max vanishes.
+    from repro.models.equivariant import _so2_conv
+    cfg = EquiformerConfig(name="t", n_layers=1, d_hidden=4, l_max=3,
+                           m_max=1)
+    params = init_equiformer_params(cfg, jax.random.PRNGKey(0))
+    x = jnp.asarray(np.random.default_rng(0).normal(
+        size=(5, cfg.irrep_dim, 4)).astype(np.float32))
+    y = _so2_conv(x, params["layers"][0]["so2"], cfg)
+    from repro.models.equivariant import _m_component_ids
+    for m in range(cfg.m_max + 1, cfg.l_max + 1):
+        idp, idn = _m_component_ids(cfg.l_max, m)
+        assert float(jnp.abs(y[:, idp, :]).max()) == 0.0
+        assert float(jnp.abs(y[:, idn, :]).max()) == 0.0

@@ -1,0 +1,141 @@
+"""Core metric correctness: exact vs brute-force oracle, enhanced vs exact."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (count_crossings_enhanced, count_crossings_exact,
+                        count_occlusions_enhanced, count_occlusions_exact,
+                        crossing_angle_enhanced, crossing_angle_exact,
+                        edge_length_variation, evaluate_layout, minimum_angle)
+from repro.kernels import ref
+
+
+def random_graph(rng, n_vertices, n_edges, scale=100.0):
+    pos = rng.uniform(0, scale, size=(n_vertices, 2)).astype(np.float32)
+    edges = set()
+    while len(edges) < n_edges:
+        v, u = rng.integers(0, n_vertices, 2)
+        if v != u:
+            edges.add((min(v, u), max(v, u)))
+    edges = np.array(sorted(edges), dtype=np.int32)
+    return jnp.asarray(pos), jnp.asarray(edges)
+
+
+@pytest.fixture(scope="module")
+def graph():
+    rng = np.random.default_rng(0)
+    return random_graph(rng, 300, 600)
+
+
+def test_occlusion_exact_matches_oracle(graph):
+    pos, _ = graph
+    r = 2.0
+    got = count_occlusions_exact(pos, r, block=64)
+    want = ref.occlusion_count_ref(pos[:, 0], pos[:, 1], r)
+    assert int(got) == int(want)
+
+
+def test_occlusion_enhanced_is_exact(graph):
+    # Paper Table 3: enhanced node occlusion has 0% error.
+    pos, _ = graph
+    for r in (0.5, 2.0, 5.0):
+        want = ref.occlusion_count_ref(pos[:, 0], pos[:, 1], r)
+        got, overflow = count_occlusions_enhanced(pos, r)
+        assert int(overflow) == 0
+        assert int(got) == int(want), r
+
+
+def test_crossing_exact_matches_oracle(graph):
+    pos, edges = graph
+    x1, y1 = pos[edges[:, 0], 0], pos[edges[:, 0], 1]
+    x2, y2 = pos[edges[:, 1], 0], pos[edges[:, 1], 1]
+    want = ref.crossing_count_ref(x1, y1, x2, y2, edges[:, 0], edges[:, 1])
+    got = count_crossings_exact(pos, edges, block=128)
+    assert int(got) == int(want)
+
+
+def test_crossing_enhanced_accuracy(graph):
+    # Paper Table 3: ~1.5% error for enhanced edge crossing; Table 4: error
+    # shrinks with strip width. 512 strips lands in the paper's band.
+    pos, edges = graph
+    want = int(count_crossings_exact(pos, edges))
+    got, overflow = count_crossings_enhanced(pos, edges, n_strips=512,
+                                             orientation="both")
+    assert int(overflow) == 0
+    assert want > 0
+    err = abs(int(got) - want) / want
+    assert err < 0.03, (int(got), want, err)
+    assert int(got) <= want  # strips can only miss crossings, never invent
+
+
+def test_crossing_enhanced_error_shrinks_with_strips(graph):
+    # Table 4 trend: halving strip width reduces the error.
+    pos, edges = graph
+    want = int(count_crossings_exact(pos, edges))
+    errs = []
+    for ns in (128, 512):
+        got, _ = count_crossings_enhanced(pos, edges, n_strips=ns,
+                                          orientation="vertical")
+        errs.append(abs(int(got) - want) / want)
+    assert errs[1] < errs[0]
+
+
+def test_crossing_angle_exact_in_range(graph):
+    pos, edges = graph
+    e_ca, count, dev = crossing_angle_exact(pos, edges)
+    assert count > 0
+    assert np.isfinite(float(e_ca))
+
+
+def test_crossing_angle_enhanced_accuracy(graph):
+    # Paper Table 3: ~4.5% average error for enhanced crossing angle.
+    pos, edges = graph
+    want, count, _ = crossing_angle_exact(pos, edges)
+    got, gcount, _, overflow = crossing_angle_enhanced(pos, edges,
+                                                       n_strips=512)
+    assert int(overflow) == 0
+    err = abs(float(got) - float(want)) / max(abs(float(want)), 1e-9)
+    assert err < 0.05, (float(got), float(want), err)
+
+
+def test_minimum_angle_simple():
+    # A 4-star with edges along +-x/+-y: every gap is 90 deg = ideal -> M_a = 1.
+    pos = jnp.array([[0.0, 0.0], [1.0, 0.0], [0.0, 1.0], [-1.0, 0.0],
+                     [0.0, -1.0]], jnp.float32)
+    edges = jnp.array([[0, 1], [0, 2], [0, 3], [0, 4]], jnp.int32)
+    m_a, counted = minimum_angle(pos, edges)
+    assert int(counted.sum()) == 5
+    np.testing.assert_allclose(float(m_a), 1.0, atol=1e-6)
+
+
+def test_minimum_angle_collinear_star():
+    # Two edges at 0 and 180 deg: min gap pi = ideal for deg 2 -> dev 0.
+    # Add a third edge collapsing a gap to ~0: dev = (2pi/3 - ~0)/(2pi/3) ~ 1.
+    pos = jnp.array([[0.0, 0.0], [1.0, 0.0], [-1.0, 0.0], [1.0, 1e-4]],
+                    jnp.float32)
+    edges = jnp.array([[0, 1], [0, 2], [0, 3]], jnp.int32)
+    m_a, counted = minimum_angle(pos, edges)
+    # centre vertex dev ~1, three leaves dev 0 -> M_a ~ 1 - 1/4
+    np.testing.assert_allclose(float(m_a), 0.75, atol=1e-2)
+
+
+def test_edge_length_variation_uniform():
+    # All edges the same length -> variation 0.
+    pos = jnp.array([[0.0, 0.0], [1.0, 0.0], [1.0, 1.0], [0.0, 1.0]],
+                    jnp.float32)
+    edges = jnp.array([[0, 1], [1, 2], [2, 3], [3, 0]], jnp.int32)
+    np.testing.assert_allclose(float(edge_length_variation(pos, edges)), 0.0,
+                               atol=1e-6)
+
+
+def test_evaluate_layout_end_to_end(graph):
+    pos, edges = graph
+    exact = evaluate_layout(pos, edges, method="exact")
+    enh = evaluate_layout(pos, edges, method="enhanced", n_strips=512)
+    assert exact.node_occlusion == enh.node_occlusion  # 0% error claim
+    assert abs(exact.edge_crossing - enh.edge_crossing) \
+        <= max(1, 0.03 * exact.edge_crossing)
+    assert 0.0 <= exact.minimum_angle <= 1.0
+    assert exact.edge_length_variation >= 0.0
+    assert enh.overflow == 0

@@ -1,0 +1,80 @@
+"""SO(3) machinery: orthonormality, Wigner consistency, CG equivariance."""
+
+import numpy as np
+import pytest
+
+from repro.models import so3
+
+
+def test_sph_harm_orthonormal():
+    # Monte-Carlo orthonormality check of the real SH basis up to l=4.
+    rng = np.random.default_rng(0)
+    pts = rng.normal(size=(200_000, 3))
+    pts /= np.linalg.norm(pts, axis=-1, keepdims=True)
+    Y = so3.real_sph_harm_np(pts, 4)
+    gram = (Y.T @ Y) / pts.shape[0] * (4 * np.pi)
+    np.testing.assert_allclose(gram, np.eye(Y.shape[1]), atol=0.05)
+
+
+def test_sph_harm_jnp_matches_np():
+    rng = np.random.default_rng(1)
+    pts = rng.normal(size=(512, 3))
+    pts /= np.linalg.norm(pts, axis=-1, keepdims=True)
+    for l_max in (2, 6):
+        a = so3.real_sph_harm_np(pts, l_max)
+        b = np.asarray(so3.real_sph_harm(pts.astype(np.float32), l_max))
+        np.testing.assert_allclose(a, b, atol=2e-4)
+
+
+@pytest.mark.parametrize("l", [1, 2, 3, 6])
+def test_wigner_euler_matches_lstsq(l):
+    rng = np.random.default_rng(l)
+    for _ in range(3):
+        a, b, g = rng.uniform(-np.pi, np.pi, 3)
+        R = so3._rot_z(a) @ so3._rot_y(b) @ so3._rot_z(g)
+        want = so3.wigner_from_rotation_np(l, R)
+        got = so3.wigner_euler_np(l, a, b, g)
+        np.testing.assert_allclose(got, want, atol=1e-8)
+        got_j = np.asarray(so3.wigner_euler(l, a, b, g))
+        np.testing.assert_allclose(got_j, want, atol=1e-4)
+
+
+@pytest.mark.parametrize("l", [0, 1, 2, 4])
+def test_wigner_align_to_z(l):
+    # D(align(r)) Y(r) must equal Y(z) (the north pole).
+    rng = np.random.default_rng(10 + l)
+    vec = rng.normal(size=(16, 3))
+    vec /= np.linalg.norm(vec, axis=-1, keepdims=True)
+    alpha, beta = so3.edge_alignment_angles(vec.astype(np.float32))
+    D = np.asarray(so3.wigner_align_to_z(l, alpha, beta))
+    Y = so3.real_sph_harm_np(vec, l)[:, l * l:(l + 1) ** 2]
+    Yz = so3.real_sph_harm_np(np.array([[0.0, 0.0, 1.0]]), l)[0,
+                                                              l * l:(l + 1) ** 2]
+    got = np.einsum("nij,nj->ni", D, Y)
+    np.testing.assert_allclose(got, np.broadcast_to(Yz, got.shape), atol=1e-4)
+
+
+@pytest.mark.parametrize("l1,l2,l3", [(1, 1, 0), (1, 1, 1), (1, 1, 2),
+                                      (2, 1, 1), (2, 2, 2), (2, 2, 0)])
+def test_cg_real_equivariance(l1, l2, l3):
+    # C must intertwine: C (D1 x) (D2 y) = D3 (C x y) for random rotations.
+    C = so3.clebsch_gordan_real_np(l1, l2, l3)
+    assert np.abs(C).max() > 0
+    rng = np.random.default_rng(l1 * 100 + l2 * 10 + l3)
+    for _ in range(3):
+        a, b, g = rng.uniform(-np.pi, np.pi, 3)
+        D1 = so3.wigner_euler_np(l1, a, b, g)
+        D2 = so3.wigner_euler_np(l2, a, b, g)
+        D3 = so3.wigner_euler_np(l3, a, b, g)
+        lhs = np.einsum("ijk,ia,jb->abk", C, D1, D2)
+        rhs = np.einsum("ijc,ck->ijk", C, D3.T)
+        np.testing.assert_allclose(lhs, rhs, atol=1e-8)
+
+
+def test_cg_l1_l1_l0_is_dot_product():
+    C = so3.clebsch_gordan_real_np(1, 1, 0)[:, :, 0]
+    # must be proportional to the identity (dot product up to scale)
+    off = C - np.diag(np.diag(C))
+    assert np.abs(off).max() < 1e-10
+    d = np.diag(C)
+    np.testing.assert_allclose(d, d[0] * np.ones(3), atol=1e-10)

@@ -1,0 +1,138 @@
+"""Substrate tests: optimizer, checkpoint manager (fault tolerance +
+elastic restore), neighbor sampler, data pipelines, FR layout."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.data.pipeline import ClickLogStream, StreamState, TokenStream
+from repro.graphs import datasets, layouts
+from repro.graphs.sampler import sample_fanout_batch, sample_neighbors
+from repro.optim import adamw
+
+
+def test_adamw_decreases_quadratic():
+    cfg = adamw.AdamWConfig(peak_lr=0.1, warmup_steps=5, total_steps=200,
+                            weight_decay=0.0)
+    params = {"w": jnp.asarray([3.0, -2.0]), "b": jnp.asarray(1.5)}
+    state = adamw.init_state(params)
+    loss = lambda p: jnp.sum(p["w"] ** 2) + p["b"] ** 2
+
+    @jax.jit
+    def step(params, state):
+        g = jax.grad(loss)(params)
+        return adamw.apply_updates(params, g, state, cfg)
+
+    l0 = float(loss(params))
+    for _ in range(200):
+        params, state, metrics = step(params, state)
+    assert float(loss(params)) < 1e-2 * l0
+    assert float(metrics["grad_norm"]) >= 0
+
+
+def test_grad_compression_roundtrip():
+    rng = np.random.default_rng(0)
+    tree = {"a": jnp.asarray(rng.normal(size=(130,)).astype(np.float32)),
+            "b": jnp.asarray(rng.normal(size=(7, 9)).astype(np.float32))}
+    enc = adamw.compress_int8(tree)
+    dec = adamw.decompress_int8(enc)
+    for k in tree:
+        err = np.abs(np.asarray(dec[k]) - np.asarray(tree[k])).max()
+        scale = np.abs(np.asarray(tree[k])).max()
+        assert err <= scale / 127.0 + 1e-6
+
+
+def test_checkpoint_save_restore_and_corruption(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=2)
+    tree = {"layers": [{"w": jnp.arange(6.0).reshape(2, 3)}],
+            "step": jnp.asarray(7)}
+    mgr.save(1, tree)
+    mgr.save(2, jax.tree.map(lambda x: x + 1, tree))
+    restored, step = mgr.restore(tree)
+    assert step == 2
+    np.testing.assert_allclose(np.asarray(restored["layers"][0]["w"]),
+                               np.arange(6.0).reshape(2, 3) + 1)
+    # corrupt the newest checkpoint -> restore falls back to step 1
+    with open(os.path.join(str(tmp_path), "step_000000002", "arrays.npz"),
+              "wb") as f:
+        f.write(b"garbage")
+    restored, step = mgr.restore(tree)
+    assert step == 1
+    np.testing.assert_allclose(np.asarray(restored["step"]), 7)
+
+
+def test_checkpoint_gc_keeps_newest(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=2)
+    tree = {"x": jnp.zeros(3)}
+    for s in (1, 2, 3, 4):
+        mgr.save(s, tree)
+    assert mgr.all_steps() == [3, 4]
+
+
+def test_neighbor_sampler_valid():
+    edges = datasets.random_edges(200, 600, seed=1)
+    indptr, indices = datasets.to_csr(edges, 200)
+    indptr_j, indices_j = jnp.asarray(indptr), jnp.asarray(indices)
+    seeds = jnp.arange(32, dtype=jnp.int32)
+    nbr, mask = sample_neighbors(indptr_j, indices_j, seeds, 8,
+                                 jax.random.PRNGKey(0))
+    nbr_np, mask_np = np.asarray(nbr), np.asarray(mask)
+    # every sampled neighbor must actually be adjacent to its seed
+    for b in range(32):
+        if not mask_np[b].any():
+            continue
+        adj = set(indices[indptr[b]:indptr[b + 1]].tolist())
+        for j in range(8):
+            if mask_np[b, j]:
+                assert int(nbr_np[b, j]) in adj
+
+
+def test_fanout_batch_shapes():
+    edges = datasets.random_edges(500, 2000, seed=2)
+    indptr, indices = datasets.to_csr(edges, 500)
+    feats = jnp.asarray(np.random.default_rng(0).normal(
+        size=(500, 16)).astype(np.float32))
+    labels = jnp.asarray(np.arange(500, dtype=np.int32) % 7)
+    batch = sample_fanout_batch(jnp.asarray(indptr), jnp.asarray(indices),
+                                feats, labels,
+                                jnp.arange(64, dtype=jnp.int32),
+                                jax.random.PRNGKey(1), (5, 3))
+    assert batch["x0"].shape == (64, 16)
+    assert batch["x1"].shape == (64, 5, 16)
+    assert batch["x2"].shape == (64, 5, 3, 16)
+    assert batch["m2"].shape == (64, 5, 3)
+
+
+def test_token_stream_deterministic_resume():
+    s1 = TokenStream(1000, 32, 8, seed=3)
+    batches = [s1.next_batch() for _ in range(3)]
+    s2 = TokenStream(1000, 32, 8, seed=3)
+    s2.state = StreamState.from_cursor({"seed": 3, "step": 2})
+    resumed = s2.next_batch()
+    np.testing.assert_array_equal(batches[2]["tokens"], resumed["tokens"])
+
+
+def test_click_stream_shapes_and_offsets():
+    vocabs = [100, 10, 1000]
+    s = ClickLogStream(vocabs, 16, seed=0)
+    b = s.next_batch()
+    assert b["ids"].shape == (16, 3)
+    assert (b["ids"][:, 0] < 100).all()
+    assert (b["ids"][:, 1] >= 100).all() and (b["ids"][:, 1] < 110).all()
+    assert set(np.unique(b["labels"])) <= {0.0, 1.0}
+
+
+def test_fruchterman_reingold_improves_readability():
+    from repro.core import count_crossings_exact
+    edges_np = datasets.random_edges(60, 90, seed=4)
+    pos0 = jnp.asarray(layouts.random_layout(60, seed=4))
+    edges = jnp.asarray(edges_np)
+    pos1 = layouts.fruchterman_reingold(pos0, edges, n_iter=60, block=64)
+    assert bool(jnp.all(jnp.isfinite(pos1)))
+    c0 = int(count_crossings_exact(pos0, edges))
+    c1 = int(count_crossings_exact(pos1, edges))
+    assert c1 < c0  # FR layouts reduce crossings on sparse graphs

@@ -1,0 +1,60 @@
+"""End-to-end behaviour tests for the paper's system: evaluate layouts
+through the full public API, exercise the paper's central claims at the
+system level, and smoke the serving pipeline."""
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import evaluate_layout
+from repro.graphs.datasets import paper_graph, random_edges
+from repro.graphs.layouts import fruchterman_reingold, random_layout
+
+
+def test_end_to_end_paper_pipeline():
+    """The paper's experiment, miniaturized: random layout of a SNAP-sized
+    (scaled) graph -> exact and enhanced evaluations agree per Table 3."""
+    edges, n_v = paper_graph("ego-Facebook", seed=0, scale=0.04)
+    pos = random_layout(n_v, seed=1)
+    exact = evaluate_layout(pos, edges, method="exact")
+    enhanced = evaluate_layout(pos, edges, method="enhanced", n_strips=512)
+    # N_c exact (0% error claim)
+    assert enhanced.node_occlusion == exact.node_occlusion
+    # E_c within the paper's error band
+    err = abs(enhanced.edge_crossing - exact.edge_crossing) \
+        / max(exact.edge_crossing, 1)
+    assert err < 0.03
+    # E_ca within the paper's error band
+    aerr = abs(enhanced.edge_crossing_angle - exact.edge_crossing_angle)
+    assert aerr < 0.05
+    # shared metrics are method-independent
+    assert abs(enhanced.minimum_angle - exact.minimum_angle) < 1e-5
+    assert abs(enhanced.edge_length_variation
+               - exact.edge_length_variation) < 1e-5
+
+
+def test_layout_optimization_improves_readability():
+    """The paper's application: FR optimization monitored by the
+    readability engine improves crossing counts."""
+    edges = random_edges(80, 120, seed=2)
+    pos0 = random_layout(80, seed=2)
+    before = evaluate_layout(pos0, edges, method="enhanced", n_strips=128)
+    pos1 = np.asarray(fruchterman_reingold(jnp.asarray(pos0),
+                                           jnp.asarray(edges),
+                                           n_iter=80, block=128))
+    after = evaluate_layout(pos1, edges, method="enhanced", n_strips=128)
+    assert after.edge_crossing < before.edge_crossing
+
+
+def test_metrics_scale_invariance():
+    """Readability counts must be invariant to rigid translation, and the
+    crossing count to uniform scaling (geometry sanity)."""
+    edges = random_edges(60, 150, seed=3)
+    pos = random_layout(60, seed=3)
+    base = evaluate_layout(pos, edges, method="exact")
+    shifted = evaluate_layout(pos + 17.5, edges, method="exact")
+    assert shifted.edge_crossing == base.edge_crossing
+    assert shifted.node_occlusion == base.node_occlusion
+    scaled = evaluate_layout(pos * 3.0, edges, method="exact",
+                             radius=1.5)  # radius scales with layout
+    assert scaled.edge_crossing == base.edge_crossing
+    assert scaled.node_occlusion == base.node_occlusion

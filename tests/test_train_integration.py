@@ -1,0 +1,111 @@
+"""End-to-end integration: training loop with fault-tolerant resume,
+gradient accumulation/compression parity, serving paths."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.launch.train import main as train_main
+
+
+def test_lm_training_decreases_loss(tmp_path):
+    losses = train_main([
+        "--arch", "qwen3-4b", "--smoke", "--steps", "30", "--batch", "8",
+        "--seq", "64", "--lr", "3e-3",
+        "--checkpoint-dir", str(tmp_path), "--checkpoint-every", "10",
+    ])
+    assert losses[-1] < losses[0]
+
+
+def test_lm_training_resume_matches(tmp_path):
+    # run 20 steps straight
+    full = train_main(["--arch", "qwen3-4b", "--smoke", "--steps", "20",
+                       "--batch", "4", "--seq", "32", "--lr", "1e-3"])
+    # run 10 steps with checkpoint, then 'crash' and resume to 20
+    d = str(tmp_path / "ck")
+    train_main(["--arch", "qwen3-4b", "--smoke", "--steps", "10",
+                "--batch", "4", "--seq", "32", "--lr", "1e-3",
+                "--checkpoint-dir", d, "--checkpoint-every", "10"])
+    resumed = train_main(["--arch", "qwen3-4b", "--smoke", "--steps", "20",
+                          "--batch", "4", "--seq", "32", "--lr", "1e-3",
+                          "--checkpoint-dir", d,
+                          "--checkpoint-every", "10"])
+    # the resumed run reproduces the uninterrupted trajectory (same data
+    # cursor, same optimizer state) to float tolerance
+    np.testing.assert_allclose(resumed[-1], full[-1], rtol=2e-3)
+
+
+def test_grad_accum_matches_full_batch():
+    from repro.models import transformer as tflib
+    from repro.configs import get_arch
+    from repro.launch.train import build_lm_trainer
+    from repro.optim import adamw
+
+    cfg = get_arch("qwen3-4b").smoke_config.with_mesh(1)
+    opt_cfg = adamw.AdamWConfig(peak_lr=1e-3, warmup_steps=1,
+                                total_steps=10)
+    params = tflib.init_params(cfg, jax.random.PRNGKey(0))
+    state = adamw.init_state(params)
+    rng = np.random.default_rng(0)
+    batch = {"tokens": jnp.asarray(rng.integers(0, cfg.vocab_size, (8, 32)),
+                                   jnp.int32),
+             "labels": jnp.asarray(rng.integers(0, cfg.vocab_size, (8, 32)),
+                                   jnp.int32)}
+    step1 = build_lm_trainer(cfg, opt_cfg, grad_accum=1)
+    step4 = build_lm_trainer(cfg, opt_cfg, grad_accum=4)
+    # the trainer donates params/opt buffers -> pass fresh copies each call
+    copy = lambda t: jax.tree.map(jnp.copy, t)
+    p1, _, m1 = step1(copy(params), copy(state), batch)
+    p4, _, m4 = step4(copy(params), copy(state), batch)
+    # microbatched loss is the mean of per-microbatch means; with equal
+    # token counts the update matches the full batch closely
+    np.testing.assert_allclose(float(m1["loss"]), float(m4["loss"]),
+                               rtol=1e-3)
+    l1 = jax.tree.leaves(p1)
+    l4 = jax.tree.leaves(p4)
+    for a, b in zip(l1, l4):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=5e-3)
+
+
+def test_compressed_grads_still_train():
+    losses = train_main(["--arch", "qwen3-4b", "--smoke", "--steps", "20",
+                         "--batch", "4", "--seq", "32", "--lr", "3e-3",
+                         "--compress-grads"])
+    assert losses[-1] < losses[0]
+
+
+def test_readability_server():
+    from repro.launch.serve import ReadabilityServer
+    from repro.graphs.datasets import random_edges
+    from repro.graphs.layouts import random_layout
+
+    server = ReadabilityServer(method="enhanced", n_strips=128)
+    reports = server.evaluate_batch(
+        [(random_layout(150, seed=i), random_edges(150, 300, seed=i))
+         for i in range(3)])
+    assert len(reports) == 3
+    for r in reports:
+        assert r.edge_crossing >= 0
+        assert 0 <= r.minimum_angle <= 1
+
+
+def test_lm_generate():
+    from repro.configs import get_arch
+    from repro.launch.serve import lm_generate
+    from repro.models import transformer as tflib
+
+    cfg = get_arch("llama4-scout-17b-a16e").smoke_config.with_mesh(1)
+    params = tflib.init_params(cfg, jax.random.PRNGKey(0))
+    prompt = jnp.ones((2, 8), jnp.int32)
+    out = lm_generate(params, cfg, prompt, n_new=4)
+    assert out.shape == (2, 4)
+    assert int(out.max()) < cfg.vocab_size
+
+
+def test_elastic_mesh_shapes():
+    from repro.launch.elastic import choose_mesh_shape
+    assert choose_mesh_shape(512) == (32, 16)
+    assert choose_mesh_shape(256) == (16, 16)
+    assert choose_mesh_shape(24) == (3, 8)
+    assert choose_mesh_shape(1) == (1, 1)
