@@ -1,0 +1,210 @@
+"""Fused-engine benchmark: unfused per-metric path vs plan-once fused path.
+
+Times, at |V| in {1k, 10k} (CPU-friendly sizes; same code path on TPU):
+
+  * the OLD unfused evaluation — per-metric enhanced calls, host-side
+    re-planning and a blocking device->host sync per metric (4 strip
+    builds + 4 reversal sweeps per evaluation with orientation='both');
+  * the fused engine single-layout path (2 builds + 2 sweeps, one traced
+    program, one transfer) — certified via grid.CALL_COUNTS;
+  * batched ``evaluate_layouts`` (B=32) vs a Python loop of single
+    evaluations — both the pre-engine per-call path (re-plans + one sync
+    per metric: what a caller wrote before this PR) and the plan-reusing
+    fused single-layout loop (isolates the pure batching win; on a
+    2-core CPU host the workload is compute-bound so this one is modest
+    — the dispatch amortization shows on accelerators).
+
+Writes BENCH_engine.json next to this file (the perf trajectory record).
+
+  PYTHONPATH=src python benchmarks/engine_bench.py
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+sys.path.insert(0, os.path.dirname(__file__))
+from common import timed  # noqa: E402
+
+from repro.core import (evaluate_layouts, evaluate_planned,  # noqa: E402
+                        plan_readability)
+from repro.core import grid as gridlib  # noqa: E402
+from repro.core.crossing import count_crossings_enhanced  # noqa: E402
+from repro.core.crossing_angle import crossing_angle_enhanced  # noqa: E402
+from repro.core.edge_length import edge_length_variation  # noqa: E402
+from repro.core.min_angle import minimum_angle  # noqa: E402
+from repro.core.occlusion import count_occlusions_enhanced  # noqa: E402
+BATCH = 32
+
+
+def make_graph(n_v, seed=0, frac_long=0.02):
+    """Layout-local graph: jittered lattice positions, lattice-neighbour
+    edges plus a sprinkle of long-range ones.
+
+    This is the enhanced algorithms' target regime (a mostly-readable
+    layout, as produced inside an optimization loop): short edges span few
+    strips, so per-strip capacities — and the O(cap^2 * strips) sweep —
+    stay proportionate.  A uniformly-random edge set would make every
+    edge span ~half the strips and blow the capacity up by ~100x, which
+    benchmarks the degenerate worst case rather than the workload.
+    """
+    rng = np.random.default_rng(seed)
+    side = int(np.ceil(np.sqrt(n_v)))
+    iy, ix = np.divmod(np.arange(n_v), side)
+    pos = np.stack([ix, iy], axis=1) * (100.0 / side)
+    pos = (pos + rng.normal(0, 0.15 * 100.0 / side,
+                            size=pos.shape)).astype(np.float32)
+    right = np.stack([np.arange(n_v), np.arange(n_v) + 1], axis=1)
+    right = right[(right[:, 1] < n_v) & (ix[: right.shape[0]] + 1 < side)]
+    down = np.stack([np.arange(n_v), np.arange(n_v) + side], axis=1)
+    down = down[down[:, 1] < n_v]
+    edges = np.concatenate([right, down])
+    n_long = int(frac_long * edges.shape[0])
+    long_e = rng.integers(0, n_v, size=(2 * n_long, 2))
+    long_e = long_e[long_e[:, 0] != long_e[:, 1]][:n_long]
+    edges = np.concatenate([edges, long_e]).astype(np.int32)
+    return jnp.asarray(pos), jnp.asarray(edges)
+
+
+def unfused_evaluate(pos, edges, n_strips):
+    """The pre-engine evaluate_layout body: re-plans per call, one host
+    sync per metric, separate strip builds + sweeps for E_c and E_ca."""
+    out = {}
+    overflow = 0
+    c, ov = count_occlusions_enhanced(pos, 0.5)
+    out["node_occlusion"] = int(c)
+    overflow += int(ov)
+    m_a, _ = minimum_angle(pos, edges)
+    out["minimum_angle"] = float(m_a)
+    out["edge_length_variation"] = float(edge_length_variation(pos, edges))
+    c, ov = count_crossings_enhanced(pos, edges, n_strips=n_strips)
+    out["edge_crossing"] = int(c)
+    overflow += int(ov)
+    e_ca, count, _, ov = crossing_angle_enhanced(pos, edges,
+                                                 n_strips=n_strips)
+    out["edge_crossing_angle"] = float(e_ca)
+    out["crossing_count_for_angle"] = int(count)
+    out["overflow"] = overflow + int(ov)
+    return out
+
+
+def bench_size(n_v, n_strips, *, batch=True):
+    pos, edges = make_graph(n_v)
+    rec = {"n_vertices": n_v, "n_edges": int(edges.shape[0]),
+           "n_strips": n_strips}
+
+    # -- work-shape certification: builds/sweeps per evaluation ------------
+    gridlib.reset_call_counts()
+    unfused_evaluate(pos, edges, n_strips)
+    rec["unfused_strip_builds"] = gridlib.CALL_COUNTS["strip_builds"]
+    rec["unfused_reversal_sweeps"] = gridlib.CALL_COUNTS["reversal_sweeps"]
+
+    t0 = time.perf_counter()
+    plan = plan_readability(pos, edges, n_strips=n_strips)
+    rec["plan_seconds"] = time.perf_counter() - t0
+
+    gridlib.reset_call_counts()
+    jax.block_until_ready(evaluate_planned(plan, pos, edges))  # traces here
+    rec["fused_strip_builds"] = gridlib.CALL_COUNTS["strip_builds"]
+    rec["fused_reversal_sweeps"] = gridlib.CALL_COUNTS["reversal_sweeps"]
+
+    # -- single-layout timings --------------------------------------------
+    t_unfused, _ = timed(unfused_evaluate, pos, edges, n_strips, repeats=3)
+    t_fused, _ = timed(lambda: jax.block_until_ready(
+        evaluate_planned(plan, pos, edges)), repeats=5)
+    rec["unfused_seconds"] = t_unfused
+    rec["fused_seconds"] = t_fused
+    rec["single_speedup"] = t_unfused / t_fused
+
+    # -- batched (B candidate layouts of one graph, modest perturbations,
+    # as produced inside an optimization loop) -----------------------------
+    if batch:
+        rng = np.random.default_rng(1)
+        sigma = 0.3 * 100.0 / np.sqrt(n_v)   # ~0.3 lattice spacings
+        b = np.stack([np.asarray(pos) +
+                      rng.normal(0, sigma, size=pos.shape).astype(np.float32)
+                      for _ in range(BATCH)])
+        bplan = plan_readability(b, edges, n_strips=n_strips)
+        bj = jnp.asarray(b)
+        jax.block_until_ready(evaluate_planned(bplan, bj[0], edges))  # warm
+        jax.block_until_ready(evaluate_layouts(bplan, bj, edges))     # warm
+
+        # loop of single evaluations as a caller wrote them before the
+        # engine existed: per-call re-planning + per-metric host syncs
+        # (timed on a few batch members, extrapolated to B)
+        k = 4
+        t0 = time.perf_counter()
+        for i in range(k):
+            unfused_evaluate(bj[i], edges, n_strips)
+        t_loop_unfused = (time.perf_counter() - t0) * (BATCH / k)
+
+        # loop of fused single evaluations reusing the plan (the new
+        # fast path, minus batching)
+        def loop_planned():
+            return [jax.block_until_ready(
+                evaluate_planned(bplan, bj[i], edges))
+                for i in range(BATCH)]
+
+        t_loop_planned, _ = timed(loop_planned, repeats=2)
+        t_batch, _ = timed(lambda: jax.block_until_ready(
+            evaluate_layouts(bplan, bj, edges)), repeats=2)
+        rec["batch_size"] = BATCH
+        rec["loop_single_seconds"] = t_loop_unfused
+        rec["loop_single_measured_candidates"] = k
+        rec["loop_planned_seconds"] = t_loop_planned
+        rec["batched_seconds"] = t_batch
+        rec["batched_speedup_vs_single_loop"] = t_loop_unfused / t_batch
+        rec["batched_speedup_vs_planned_loop"] = t_loop_planned / t_batch
+    return rec
+
+
+def main():
+    results = {"backend": jax.default_backend(),
+               "sizes": []}
+    for n_v, n_strips in ((1000, 128), (10000, 256)):
+        print(f"|V|={n_v} ...", flush=True)
+        rec = bench_size(n_v, n_strips)
+        results["sizes"].append(rec)
+        print(f"  work shape : unfused {rec['unfused_strip_builds']} builds/"
+              f"{rec['unfused_reversal_sweeps']} sweeps -> fused "
+              f"{rec['fused_strip_builds']}/{rec['fused_reversal_sweeps']}")
+        print(f"  single     : unfused {rec['unfused_seconds'] * 1e3:8.1f} ms"
+              f"  fused {rec['fused_seconds'] * 1e3:8.1f} ms"
+              f"  speedup {rec['single_speedup']:.2f}x")
+        print(f"  batched B={rec['batch_size']}: single-eval loop "
+              f"{rec['loop_single_seconds'] * 1e3:8.1f} ms  planned loop "
+              f"{rec['loop_planned_seconds'] * 1e3:8.1f} ms  batched "
+              f"{rec['batched_seconds'] * 1e3:8.1f} ms  speedup "
+              f"{rec['batched_speedup_vs_single_loop']:.2f}x / "
+              f"{rec['batched_speedup_vs_planned_loop']:.2f}x")
+
+    ok_shape = all(r["fused_strip_builds"] == 2
+                   and r["fused_reversal_sweeps"] == 2
+                   and r["unfused_strip_builds"] == 4
+                   and r["unfused_reversal_sweeps"] == 4
+                   for r in results["sizes"])
+    big = results["sizes"][-1]
+    results["acceptance"] = {
+        "fused_work_shape_2_builds_2_sweeps": ok_shape,
+        "single_speedup_10k_ge_1.5x": big["single_speedup"] >= 1.5,
+        "batched_speedup_ge_3x": all(
+            r["batched_speedup_vs_single_loop"] >= 3.0
+            for r in results["sizes"]
+            if "batched_speedup_vs_single_loop" in r),
+    }
+    out = os.path.join(os.path.dirname(__file__), "..", "BENCH_engine.json")
+    with open(os.path.abspath(out), "w") as f:
+        json.dump(results, f, indent=2)
+    print("acceptance:", results["acceptance"])
+    print(f"wrote {os.path.abspath(out)}")
+
+
+if __name__ == "__main__":
+    main()

@@ -7,8 +7,12 @@ from repro.core.crossing_angle import (crossing_angle_enhanced,  # noqa: F401
                                        crossing_angle_exact,
                                        crossing_angle_strips)
 from repro.core.edge_length import edge_length_variation  # noqa: F401
+from repro.core.engine import (EngineResult, ReadabilityPlan,  # noqa: F401
+                               evaluate_layouts, evaluate_once,
+                               evaluate_planned, plan_readability)
 from repro.core.metrics import (ALL_METRICS, ReadabilityReport,  # noqa: F401
-                                evaluate_layout)
+                                evaluate_layout, report_from_result,
+                                reports_from_batch)
 from repro.core.min_angle import minimum_angle  # noqa: F401
 from repro.core.occlusion import (count_occlusions_enhanced,  # noqa: F401
                                   count_occlusions_exact,

@@ -73,55 +73,19 @@ def bucket_reversal_stats(buckets: gridlib.SegmentBuckets, *,
     Returns ``(count,)`` or ``(count, deviation_sum)`` when ``ideal_angle``
     is given (the crossing-angle variant: the paper's 2-D segment tree
     collapses to a masked elementwise reduction here, see DESIGN.md S2).
+
+    Thin shim over the engine's fused sweep
+    (:func:`repro.core.engine.fused_reversal_stats`) — one formula for
+    every reversal consumer.
     """
-    n_strips = buckets.yl.shape[0]
-    cap = buckets.yl.shape[1]
-    # keep the (strip_block, cap, cap) pair tiles within a fixed element
-    # budget — dense graphs can have cap in the thousands
-    strip_block = max(1, min(strip_block, (1 << 26) // max(cap * cap, 1)))
-    n_blocks = -(-n_strips // strip_block)
-    pad = n_blocks * strip_block
-
-    def padc(a, fill):
-        extra = pad - n_strips
-        if extra == 0:
-            return a
-        return jnp.concatenate(
-            [a, jnp.full((extra,) + a.shape[1:], fill, a.dtype)])
-
-    yl = padc(buckets.yl, 0.0)
-    yr = padc(buckets.yr, 0.0)
-    th = padc(buckets.theta, 0.0)
-    v = padc(buckets.v, -1)
-    u = padc(buckets.u, -2)
-    ok = padc(buckets.valid, False)
+    from repro.core import engine
     want_angle = ideal_angle is not None
-    ideal = jnp.asarray(ideal_angle if want_angle else 1.0, yl.dtype)
-
-    def block_fn(b0):
-        sl = lambda a: lax.dynamic_slice_in_dim(a, b0, strip_block, axis=0)
-        byl, byr, bth = sl(yl), sl(yr), sl(th)
-        bv, bu, bok = sl(v), sl(u), sl(ok)
-        rev = (byl[:, :, None] < byl[:, None, :]) & (byr[:, :, None] > byr[:, None, :])
-        shared = ((bv[:, :, None] == bv[:, None, :]) |
-                  (bv[:, :, None] == bu[:, None, :]) |
-                  (bu[:, :, None] == bv[:, None, :]) |
-                  (bu[:, :, None] == bu[:, None, :]))
-        mask = rev & ~shared & bok[:, :, None] & bok[:, None, :]
-        cnt = jnp.sum(jnp.where(mask, 1, 0), dtype=jnp.int64)
-        if not want_angle:
-            return cnt, jnp.zeros((), yl.dtype)
-        d = jnp.abs(bth[:, :, None] - bth[:, None, :])
-        a_c = jnp.minimum(d, jnp.pi - d)
-        dev = jnp.abs(ideal - a_c) / ideal
-        dev_sum = jnp.sum(jnp.where(mask, dev, 0.0))
-        return cnt, dev_sum
-
-    starts = jnp.arange(0, pad, strip_block, dtype=jnp.int32)
-    counts, devs = lax.map(block_fn, starts)
+    count, dev_sum = engine.fused_reversal_stats(
+        buckets, ideal=ideal_angle if want_angle else 1.0,
+        strip_block=strip_block, with_angle=want_angle)
     if want_angle:
-        return jnp.sum(counts), jnp.sum(devs)
-    return (jnp.sum(counts),)
+        return count, dev_sum
+    return (count,)
 
 
 def count_crossings_strips(pos, edges, n_strips: int, max_segments: int,

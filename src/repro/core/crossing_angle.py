@@ -93,16 +93,24 @@ def crossing_angle_enhanced(pos, edges, *, n_strips: int = 64,
                             ideal=DEFAULT_IDEAL, orientation: str = "both",
                             edge_valid=None, strip_block: int = 256):
     """Host-facing enhanced E_ca; on 'both' keeps the orientation that saw
-    the most crossings (the better-covered estimate, cf. Table 4)."""
+    the most crossings (the better-covered estimate, cf. Table 4).
+
+    The orientation pick happens with ``jnp.where`` on device — no
+    per-orientation blocking transfer (the old ``int(count)`` forced one
+    host sync per axis)."""
     pos = jnp.asarray(pos)
     edges = jnp.asarray(edges)
-    best = None
+    results = []
     axes = {"vertical": (0,), "horizontal": (1,), "both": (0, 1)}[orientation]
     for axis in axes:
         max_segments, cap = gridlib.plan_strips(pos, edges, n_strips, axis=axis)
-        e_ca, count, dev_sum, ov = crossing_angle_strips(
+        results.append(crossing_angle_strips(
             pos, edges, n_strips, max_segments, cap, ideal=ideal, axis=axis,
-            edge_valid=edge_valid, strip_block=min(strip_block, n_strips))
-        if best is None or int(count) > int(best[1]):
-            best = (e_ca, count, dev_sum, ov)
+            edge_valid=edge_valid, strip_block=min(strip_block, n_strips)))
+    best = results[0]
+    for cand in results[1:]:
+        # strictly-greater keeps the earlier axis on ties, matching the
+        # historical host-side selection
+        take = cand[1] > best[1]
+        best = tuple(jnp.where(take, c, b) for c, b in zip(cand, best))
     return best

@@ -1,0 +1,367 @@
+"""Fused readability engine: plan once, evaluate many (fast path).
+
+The paper's point is that readability evaluation must be cheap enough to
+sit *inside* layout-generation loops. :func:`repro.core.evaluate_layout`
+pays per-call overhead that defeats that: capacities are re-planned on
+the host every call, edge crossing and crossing angle each rebuild the
+identical strip decomposition and each rerun the O(cap^2 * strips)
+reversal sweep per orientation, and every metric forces its own
+device->host sync.
+
+This module splits the work:
+
+* **Plan** (:func:`plan_readability`, host side, once per graph
+  topology/extent): occlusion-grid dims + capacity, per-orientation strip
+  segment budgets + capacities — everything that must be a *static* shape.
+  The resulting :class:`ReadabilityPlan` is hashable and is passed to the
+  jitted evaluators as a static argument, so re-evaluating under the same
+  plan never retraces. Capacities carry padding headroom; if the layout
+  drifts far enough to overflow them, the ``overflow`` counter in the
+  result says so — replan then.
+
+* **Evaluate** (:func:`evaluate_planned`, jitted, many times): all five
+  metrics in ONE traced program with shared decompositions.  Data flow::
+
+      pos ──> cell buckets ────────────────────────────> N_c        (build x1)
+      pos ──> strip segments ──> per-strip buckets ──┐
+              (per orientation,                      ├─> fused reversal
+               built ONCE and shared                 │   sweep ──> (E_c count,
+               by E_c *and* E_ca)                    ┘              E_ca dev sum)
+      pos ──> half-edge sort ──> M_a;   pos ──> edge lengths ──> M_l
+
+  The per-strip reversal sweep — the dominant O(cap^2 * strips) cost — runs
+  once per orientation and yields the crossing count *and* the angle
+  deviation sum together (:func:`fused_reversal_block` is the single
+  source of truth for that formula; the unfused per-metric paths and the
+  ``shard_map`` drivers in :mod:`repro.distributed.gridded` reuse it).
+  With ``orientation='both'`` that is 2 strip builds + 2 sweeps where the
+  unfused path does 4 + 4. The best orientation is selected with
+  ``jnp.where`` on device — no per-orientation host sync — and all scalars
+  come back as one device tuple: one transfer instead of five.
+
+* **Batch** (:func:`evaluate_layouts`): ``vmap`` over B candidate layouts
+  of the same graph — one dispatch for a whole population, the entry
+  point for layout-optimization loops (see
+  ``examples/layout_optimization.py``).
+
+``use_kernels=True`` routes the per-strip reversal sweep through the
+Pallas TPU kernel (:func:`repro.kernels.ops.strip_reversal_op`) instead
+of the blocked-``lax.map`` jnp path; counts are identical, the float
+deviation sum may differ in rounding (different summation order).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from repro.core import grid as gridlib
+from repro.core import crossing_angle as _calib
+from repro.core.edge_length import edge_length_variation
+from repro.core.min_angle import minimum_angle
+from repro.core.occlusion import count_occlusions_gridded
+
+# The five paper metrics (re-exported by repro.core.metrics).
+ALL_METRICS = ("node_occlusion", "minimum_angle", "edge_length_variation",
+               "edge_crossing", "edge_crossing_angle")
+
+# The canonical ideal crossing angle (70 deg, Huang et al. 2008) as a
+# plan-hashable Python float; the float32 roundtrip of the one constant in
+# crossing_angle keeps on-device comparisons bit-compatible with it.
+DEFAULT_IDEAL = float(_calib.DEFAULT_IDEAL)
+
+_AXES = {"vertical": (0,), "horizontal": (1,), "both": (0, 1)}
+
+# Number of times the engine's evaluators have been *traced* (not called);
+# a second call with the same plan and shapes must not bump this.
+_trace_count = 0
+
+
+def trace_count() -> int:
+    """How many times the fused evaluator body has been traced."""
+    return _trace_count
+
+
+@dataclasses.dataclass(frozen=True)
+class ReadabilityPlan:
+    """Host-side static plan: everything shape-like, hashable, jit-static.
+
+    Built by :func:`plan_readability`; fields mirror what the unfused
+    per-metric paths re-derive on every call.
+    """
+
+    radius: float
+    ideal: float
+    n_strips: int
+    axes: tuple                 # strip orientations, subset of (0, 1)
+    metrics: tuple              # subset of ALL_METRICS
+    grid_origin: tuple          # (x0, y0) of the occlusion grid
+    grid_nx: int
+    grid_ny: int
+    cell_cap: int
+    grid_cell_size: float       # >= 2*radius (coarsened on sparse layouts)
+    strip_plans: tuple          # ((max_segments, cap), ...) aligned w/ axes
+    cell_block: int = 512
+    strip_block: int = 256
+
+    @property
+    def orientation(self) -> str:
+        for name, axes in _AXES.items():
+            if axes == self.axes:
+                return name
+        return str(self.axes)
+
+
+class EngineResult(NamedTuple):
+    """Device scalars from one fused evaluation (one transfer gets all).
+
+    Fields for metrics excluded from the plan are ``None``.
+    """
+
+    node_occlusion: Optional[jax.Array] = None
+    minimum_angle: Optional[jax.Array] = None
+    edge_length_variation: Optional[jax.Array] = None
+    edge_crossing: Optional[jax.Array] = None
+    edge_crossing_angle: Optional[jax.Array] = None
+    crossing_count_for_angle: Optional[jax.Array] = None
+    overflow: Optional[jax.Array] = None
+
+
+# ---------------------------------------------------------------------------
+# the fused per-strip reversal pass (single source of truth)
+# ---------------------------------------------------------------------------
+
+def fused_reversal_block(yl, yr, theta, v, u, valid, *, ideal,
+                         with_angle: bool = True):
+    """Dense reversal sweep over a ``(B, cap)`` block of strip buckets.
+
+    Returns ``(count, deviation_sum)``: the crossing count (order
+    reversals between the strip's boundary ordinates, shared endpoints
+    excluded) and — fused on the same pair mask — the crossing-angle
+    deviation sum ``sum |ideal - a_c| / ideal``.  Every reversal-sweep
+    consumer (unfused per-metric paths, the engine, the shard_map
+    drivers, and as formula reference the Pallas kernel) goes through
+    this function so count and angle can never drift apart.
+    """
+    rev = (yl[:, :, None] < yl[:, None, :]) & (yr[:, :, None] > yr[:, None, :])
+    shared = ((v[:, :, None] == v[:, None, :]) |
+              (v[:, :, None] == u[:, None, :]) |
+              (u[:, :, None] == v[:, None, :]) |
+              (u[:, :, None] == u[:, None, :]))
+    mask = rev & ~shared & valid[:, :, None] & valid[:, None, :]
+    cnt = jnp.sum(jnp.where(mask, 1, 0), dtype=jnp.int64)
+    if not with_angle:
+        return cnt, jnp.zeros((), yl.dtype)
+    ideal = jnp.asarray(ideal, yl.dtype)
+    d = jnp.abs(theta[:, :, None] - theta[:, None, :])
+    a_c = jnp.minimum(d, jnp.pi - d)
+    dev = jnp.abs(ideal - a_c) / ideal
+    dev_sum = jnp.sum(jnp.where(mask, dev, 0.0))
+    return cnt, dev_sum
+
+
+def fused_reversal_stats(buckets: gridlib.SegmentBuckets, *, ideal=1.0,
+                         strip_block: int = 256, with_angle: bool = True,
+                         use_kernels: bool = False):
+    """All-strip reversal stats: ONE sweep -> ``(count, deviation_sum)``.
+
+    Blocked ``lax.map`` over strips by default; ``use_kernels=True``
+    dispatches the Pallas per-strip kernel instead.
+    """
+    gridlib.CALL_COUNTS["reversal_sweeps"] += 1
+    if use_kernels:
+        from repro.kernels.ops import strip_reversal_op
+        return strip_reversal_op(buckets, ideal=float(ideal),
+                                 with_angle=with_angle)
+
+    n_strips = buckets.yl.shape[0]
+    cap = buckets.yl.shape[1]
+    # keep the (strip_block, cap, cap) pair tiles within a fixed element
+    # budget — dense graphs can have cap in the thousands
+    strip_block = max(1, min(strip_block, (1 << 26) // max(cap * cap, 1)))
+    n_blocks = -(-n_strips // strip_block)
+    pad = n_blocks * strip_block
+
+    def padc(a, fill):
+        extra = pad - n_strips
+        if extra == 0:
+            return a
+        return jnp.concatenate(
+            [a, jnp.full((extra,) + a.shape[1:], fill, a.dtype)])
+
+    yl = padc(buckets.yl, 0.0)
+    yr = padc(buckets.yr, 0.0)
+    th = padc(buckets.theta, 0.0)
+    v = padc(buckets.v, -1)
+    u = padc(buckets.u, -2)
+    ok = padc(buckets.valid, False)
+
+    def block_fn(b0):
+        sl = lambda a: lax.dynamic_slice_in_dim(a, b0, strip_block, axis=0)
+        return fused_reversal_block(sl(yl), sl(yr), sl(th), sl(v), sl(u),
+                                    sl(ok), ideal=ideal,
+                                    with_angle=with_angle)
+
+    starts = jnp.arange(0, pad, strip_block, dtype=jnp.int32)
+    counts, devs = lax.map(block_fn, starts)
+    return jnp.sum(counts), jnp.sum(devs)
+
+
+# ---------------------------------------------------------------------------
+# planning (host side, once per graph topology/extent)
+# ---------------------------------------------------------------------------
+
+def plan_readability(pos, edges, *, radius: float = 0.5, ideal_angle=None,
+                     n_strips: int = 64, orientation: str = "both",
+                     metrics=ALL_METRICS, cell_block: int = 512,
+                     strip_block: int = 256) -> ReadabilityPlan:
+    """Build a :class:`ReadabilityPlan` from concrete data (host side).
+
+    ``pos`` may be ``(V, 2)`` or a batch ``(B, V, 2)`` — a batched plan
+    sizes every capacity to cover all B layouts, for
+    :func:`evaluate_layouts`.  Planning is the only numpy round-trip;
+    everything downstream stays on device.
+    """
+    pos = np.asarray(pos, np.float32)
+    edges = np.asarray(edges, np.int32)
+    pos_b = pos[None] if pos.ndim == 2 else pos
+    metrics = tuple(metrics)
+    ideal = float(DEFAULT_IDEAL if ideal_angle is None else ideal_angle)
+
+    if "node_occlusion" in metrics:
+        origin, nx, ny, cell_cap, cell_size = gridlib.plan_occlusion_grid(
+            pos_b, radius)
+    else:
+        origin, nx, ny, cell_cap, cell_size = (0.0, 0.0), 1, 1, 8, 1.0
+
+    axes = _AXES[orientation]
+    strip_plans = []
+    if ("edge_crossing" in metrics) or ("edge_crossing_angle" in metrics):
+        for axis in axes:
+            max_segments, cap = 0, 0
+            for p in pos_b:
+                ms, c = gridlib.plan_strips(p, edges, n_strips, axis=axis)
+                max_segments, cap = max(max_segments, ms), max(cap, c)
+            strip_plans.append((max_segments, cap))
+
+    return ReadabilityPlan(
+        radius=float(radius), ideal=ideal, n_strips=int(n_strips),
+        axes=axes, metrics=metrics, grid_origin=origin, grid_nx=nx,
+        grid_ny=ny, cell_cap=cell_cap, grid_cell_size=float(cell_size),
+        strip_plans=tuple(strip_plans),
+        cell_block=int(cell_block), strip_block=int(strip_block))
+
+
+# ---------------------------------------------------------------------------
+# fused evaluation (one traced program, all metrics)
+# ---------------------------------------------------------------------------
+
+def _evaluate(plan: ReadabilityPlan, pos, edges,
+              use_kernels: bool) -> EngineResult:
+    global _trace_count
+    if isinstance(pos, jax.core.Tracer):
+        _trace_count += 1
+    pos = jnp.asarray(pos, jnp.float32)
+    edges = jnp.asarray(edges, jnp.int32)
+    m = plan.metrics
+    out = {}
+    overflow = jnp.zeros((), jnp.int32)
+
+    if "node_occlusion" in m:
+        cnt, ov = count_occlusions_gridded(
+            pos, plan.radius, plan.grid_origin, plan.grid_nx, plan.grid_ny,
+            plan.cell_cap,
+            cell_block=min(plan.cell_block, plan.grid_nx * plan.grid_ny),
+            cell_size=plan.grid_cell_size)
+        out["node_occlusion"] = cnt
+        overflow = overflow + ov
+    if "minimum_angle" in m:
+        m_a, _ = minimum_angle(pos, edges)
+        out["minimum_angle"] = m_a
+    if "edge_length_variation" in m:
+        out["edge_length_variation"] = edge_length_variation(pos, edges)
+
+    want_ec = "edge_crossing" in m
+    want_eca = "edge_crossing_angle" in m
+    if want_ec or want_eca:
+        stats = []
+        for axis, (max_segments, cap) in zip(plan.axes, plan.strip_plans):
+            # strip build + bucketing happen ONCE per orientation; the one
+            # fused sweep serves both E_c and E_ca
+            segs = gridlib.build_strip_segments(
+                pos, edges, plan.n_strips, max_segments, axis=axis)
+            buckets = gridlib.bucketize_segments(segs, plan.n_strips, cap)
+            cnt, dev = fused_reversal_stats(
+                buckets, ideal=plan.ideal,
+                strip_block=min(plan.strip_block, plan.n_strips),
+                with_angle=want_eca, use_kernels=use_kernels)
+            stats.append((cnt, dev, buckets.overflow))
+        if len(stats) == 1:
+            (ec_count, best_dev, ec_ov) = stats[0]
+            best_count, best_ov = ec_count, ec_ov
+        else:
+            (c0, d0, o0), (c1, d1, o1) = stats
+            ec_count = jnp.maximum(c0, c1)
+            ec_ov = jnp.maximum(o0, o1)
+            # orientation with the most crossings = best-covered estimate
+            # (Table 4); strictly-greater keeps axis-0 on ties, matching
+            # the unfused path — selected on device, zero host syncs.
+            take1 = c1 > c0
+            best_count = jnp.where(take1, c1, c0)
+            best_dev = jnp.where(take1, d1, d0)
+            best_ov = jnp.where(take1, o1, o0)
+        if want_ec:
+            out["edge_crossing"] = ec_count
+            overflow = overflow + ec_ov
+        if want_eca:
+            out["edge_crossing_angle"] = jnp.where(
+                best_count > 0,
+                1.0 - best_dev / jnp.maximum(best_count, 1), 1.0)
+            out["crossing_count_for_angle"] = best_count
+            overflow = overflow + best_ov
+
+    return EngineResult(overflow=overflow, **out)
+
+
+def evaluate_once(plan: ReadabilityPlan, pos, edges, *,
+                  use_kernels: bool = False) -> EngineResult:
+    """One fused evaluation, eagerly (no jit cache entry).
+
+    Same program as :func:`evaluate_planned` minus the compilation: the
+    right call when the plan is fresh-per-layout (e.g. the
+    ``evaluate_layout`` compatibility wrapper), where jitting would
+    recompile on every call and grow the jit cache without bound."""
+    return _evaluate(plan, pos, edges, use_kernels)
+
+
+def _evaluate_planned(plan, pos, edges, use_kernels=False):
+    return _evaluate(plan, pos, edges, use_kernels)
+
+
+def _evaluate_layouts(plan, batch_pos, edges, use_kernels=False):
+    return jax.vmap(
+        lambda p: _evaluate(plan, p, edges, use_kernels))(batch_pos)
+
+
+evaluate_planned = jax.jit(_evaluate_planned,
+                           static_argnames=("plan", "use_kernels"))
+evaluate_planned.__doc__ = (
+    """All five metrics for one layout under ``plan``, fused + jitted.
+
+    ``evaluate_planned(plan, pos, edges, use_kernels=False)`` ->
+    :class:`EngineResult` of device scalars (one transfer fetches all).
+    ``plan`` is static: repeated calls with the same plan and shapes hit
+    the jit cache.""")
+
+evaluate_layouts = jax.jit(_evaluate_layouts,
+                           static_argnames=("plan", "use_kernels"))
+evaluate_layouts.__doc__ = (
+    """Batched evaluation: ``(B, V, 2)`` candidate layouts of one graph
+    in a single vmapped dispatch. Returns an :class:`EngineResult` whose
+    fields have a leading batch dimension. Plan with a batched ``pos``
+    (or any representative layout) via :func:`plan_readability`.""")

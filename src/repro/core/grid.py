@@ -32,6 +32,16 @@ import jax.numpy as jnp
 # use these four directed offsets.
 HALF_NEIGHBOURHOOD = ((1, 0), (0, 1), (1, 1), (1, -1))
 
+# Work counters (python side effects: bump once per eager call / per trace).
+# The engine benchmark uses these to certify the fused path really does
+# 2 strip builds + 2 reversal sweeps where the unfused path does 4 + 4.
+CALL_COUNTS = {"strip_builds": 0, "reversal_sweeps": 0}
+
+
+def reset_call_counts():
+    for k in CALL_COUNTS:
+        CALL_COUNTS[k] = 0
+
 
 class CellBuckets(NamedTuple):
     """Dense capacity-padded buckets of vertices binned into grid cells."""
@@ -126,18 +136,28 @@ def scatter_to_buckets(keys: jax.Array, n_buckets: int, cap: int,
 # occlusion grid (2r x 2r cells)
 # ---------------------------------------------------------------------------
 
-def cell_indices(pos: jax.Array, radius, origin, nx: int, ny: int):
-    """Cell (ix, iy) and flat id for each vertex centre. Cell size = 2r."""
-    size = 2.0 * radius
+def cell_indices(pos: jax.Array, radius, origin, nx: int, ny: int,
+                 cell_size=None):
+    """Cell (ix, iy) and flat id for each vertex centre.
+
+    ``cell_size`` defaults to the paper's 2r; any size >= 2r keeps the
+    half-neighbourhood sweep exact (a pair closer than 2r <= size still
+    lands in the same or an adjacent cell), and the planner exploits that
+    to keep the cell count proportional to the vertex count — a 2r grid
+    over a sparse layout is mostly empty cells whose capacity padding
+    dominates the dense sweep.
+    """
+    size = 2.0 * radius if cell_size is None else cell_size
     ix = jnp.clip(jnp.floor((pos[:, 0] - origin[0]) / size).astype(jnp.int32), 0, nx - 1)
     iy = jnp.clip(jnp.floor((pos[:, 1] - origin[1]) / size).astype(jnp.int32), 0, ny - 1)
     return ix, iy, iy * nx + ix
 
 
 def build_cell_buckets(pos: jax.Array, radius, origin, nx: int, ny: int,
-                       cap: int, valid=None) -> CellBuckets:
+                       cap: int, valid=None, cell_size=None) -> CellBuckets:
     """Bin vertices into the occlusion grid (paper fig 1 A-1/A-2)."""
-    _, _, cid = cell_indices(pos, radius, origin, nx, ny)
+    _, _, cid = cell_indices(pos, radius, origin, nx, ny,
+                             cell_size=cell_size)
     x, y, bvalid, counts, overflow = scatter_to_buckets(
         cid, nx * ny, cap, pos[:, 0], pos[:, 1], valid=valid)
     return CellBuckets(x=x, y=y, valid=bvalid, counts=counts,
@@ -180,6 +200,8 @@ def build_strip_segments(pos: jax.Array, edges: jax.Array, n_strips: int,
     Table 4) — implemented by swapping the roles of x and y.
     """
     from repro.core.geometry import segment_theta
+
+    CALL_COUNTS["strip_builds"] += 1
 
     p = pos[edges[:, 0]]
     q = pos[edges[:, 1]]
@@ -251,21 +273,49 @@ def _round_up(n: int, multiple: int) -> int:
     return int(-(-n // multiple) * multiple)
 
 
-def plan_occlusion_grid(pos, radius, pad: int = 8, cap_multiple: int = 8):
-    """Pick grid dims / origin / capacity from concrete data (host side)."""
+def occlusion_cell_size(lo, hi, radius, n_points,
+                        target_occupancy: float = 8.0) -> float:
+    """Pick the occlusion cell size: at least the paper's 2r (exactness),
+    but coarse enough that cells average ~``target_occupancy`` vertices.
+
+    A 2r grid over a sparse layout is dominated by empty capacity-padded
+    cells (n_cells x cap^2 work); coarsening until occupancy matches the
+    padding keeps the dense sweep proportional to the vertex count while
+    staying exact (any cell size >= 2r preserves the half-neighbourhood
+    coverage argument)."""
+    size = 2.0 * float(radius)
+    area = float(hi[0] - lo[0]) * float(hi[1] - lo[1])
+    if n_points > 0 and area > 0 and target_occupancy > 0:
+        size = max(size, (area * target_occupancy / n_points) ** 0.5)
+    return size
+
+
+def plan_occlusion_grid(pos, radius, pad: int = 8, cap_multiple: int = 8,
+                        target_occupancy: float = 8.0):
+    """Pick grid geometry / capacity from concrete data (host side).
+
+    ``pos`` is ``(V, 2)`` or a batch ``(B, V, 2)``; a batched plan uses a
+    shared bounding box and sizes the capacity to the max per-layout
+    occupancy.  Returns ``(origin, nx, ny, cap, cell_size)``."""
     import numpy as np
 
-    pos = np.asarray(pos)
-    lo = pos.min(axis=0) - 1e-6
-    hi = pos.max(axis=0) + 1e-6
-    size = 2.0 * float(radius)
+    pos_b = np.asarray(pos)
+    if pos_b.ndim == 2:
+        pos_b = pos_b[None]
+    lo = pos_b.reshape(-1, 2).min(axis=0) - 1e-6
+    hi = pos_b.reshape(-1, 2).max(axis=0) + 1e-6
+    size = occlusion_cell_size(lo, hi, radius, pos_b.shape[1],
+                               target_occupancy)
     nx = max(1, int(np.ceil((hi[0] - lo[0]) / size)))
     ny = max(1, int(np.ceil((hi[1] - lo[1]) / size)))
-    ix = np.clip(((pos[:, 0] - lo[0]) / size).astype(np.int64), 0, nx - 1)
-    iy = np.clip(((pos[:, 1] - lo[1]) / size).astype(np.int64), 0, ny - 1)
-    occupancy = np.bincount(iy * nx + ix, minlength=nx * ny)
-    cap = _round_up(int(occupancy.max()) + pad, cap_multiple)
-    return (float(lo[0]), float(lo[1])), nx, ny, cap
+    occ_max = 0
+    for p in pos_b:
+        ix = np.clip(((p[:, 0] - lo[0]) / size).astype(np.int64), 0, nx - 1)
+        iy = np.clip(((p[:, 1] - lo[1]) / size).astype(np.int64), 0, ny - 1)
+        occ_max = max(occ_max, int(np.bincount(iy * nx + ix,
+                                               minlength=nx * ny).max()))
+    cap = _round_up(occ_max + pad, cap_multiple)
+    return (float(lo[0]), float(lo[1])), nx, ny, cap, size
 
 
 def plan_strips(pos, edges, n_strips: int, pad: float = 1.25,

@@ -5,6 +5,18 @@ a 2-D layout, with either the exact (all-pairs) or the enhanced (grid /
 strip) algorithms. ``M_a`` and ``M_l`` have one algorithm each (they are
 cheap); ``N_c``, ``E_c``, ``E_ca`` switch on ``method``.
 
+The enhanced path is a thin compatibility wrapper over the fused engine
+(:mod:`repro.core.engine`): it plans capacities, runs the engine's fused
+evaluation (shared decompositions, one fused reversal sweep per
+orientation, one device->host transfer), and unpacks the result into a
+:class:`ReadabilityReport`.  It runs the fused program *eagerly*: plans
+here derive from the concrete positions, so jitting per call would
+recompile on nearly every new layout and grow the jit cache without
+bound.  Callers that evaluate the same graph repeatedly should plan once
+(:func:`repro.core.engine.plan_readability`) and call the jit-compiled
+:func:`repro.core.engine.evaluate_planned` /
+:func:`repro.core.engine.evaluate_layouts` directly.
+
 This module is single-device; the multi-device drivers wrap the same
 building blocks with ``shard_map`` (:mod:`repro.distributed`).
 """
@@ -14,18 +26,16 @@ from __future__ import annotations
 import dataclasses
 from typing import Optional
 
+import jax
 import jax.numpy as jnp
 
-from repro.core.crossing import count_crossings_enhanced, count_crossings_exact
-from repro.core.crossing_angle import (DEFAULT_IDEAL, crossing_angle_enhanced,
-                                       crossing_angle_exact)
+from repro.core import engine
+from repro.core.crossing import count_crossings_exact
+from repro.core.crossing_angle import DEFAULT_IDEAL, crossing_angle_exact
 from repro.core.edge_length import edge_length_variation
+from repro.core.engine import ALL_METRICS  # noqa: F401  (re-export)
 from repro.core.min_angle import minimum_angle
-from repro.core.occlusion import (count_occlusions_enhanced,
-                                  count_occlusions_exact)
-
-ALL_METRICS = ("node_occlusion", "minimum_angle", "edge_length_variation",
-               "edge_crossing", "edge_crossing_angle")
+from repro.core.occlusion import count_occlusions_exact
 
 
 @dataclasses.dataclass(frozen=True)
@@ -42,10 +52,52 @@ class ReadabilityReport:
         return dataclasses.asdict(self)
 
 
+def report_from_result(res: engine.EngineResult) -> ReadabilityReport:
+    """Convert one (unbatched) :class:`engine.EngineResult` to a report.
+
+    Fetches every scalar in a single batched device->host transfer."""
+    res = jax.device_get(res)
+    return ReadabilityReport(
+        node_occlusion=(None if res.node_occlusion is None
+                        else int(res.node_occlusion)),
+        minimum_angle=(None if res.minimum_angle is None
+                       else float(res.minimum_angle)),
+        edge_length_variation=(None if res.edge_length_variation is None
+                               else float(res.edge_length_variation)),
+        edge_crossing=(None if res.edge_crossing is None
+                       else int(res.edge_crossing)),
+        edge_crossing_angle=(None if res.edge_crossing_angle is None
+                             else float(res.edge_crossing_angle)),
+        crossing_count_for_angle=(None if res.crossing_count_for_angle is None
+                                  else int(res.crossing_count_for_angle)),
+        overflow=int(res.overflow))
+
+
+def reports_from_batch(res: engine.EngineResult):
+    """Split a batched :class:`engine.EngineResult` (leading B dim on every
+    field) into a list of B :class:`ReadabilityReport`; one transfer."""
+    res = jax.device_get(res)
+    some = next(f for f in res if f is not None)
+    batch = some.shape[0]
+
+    def pick(field, i, cast):
+        return None if field is None else cast(field[i])
+
+    return [ReadabilityReport(
+        node_occlusion=pick(res.node_occlusion, i, int),
+        minimum_angle=pick(res.minimum_angle, i, float),
+        edge_length_variation=pick(res.edge_length_variation, i, float),
+        edge_crossing=pick(res.edge_crossing, i, int),
+        edge_crossing_angle=pick(res.edge_crossing_angle, i, float),
+        crossing_count_for_angle=pick(res.crossing_count_for_angle, i, int),
+        overflow=pick(res.overflow, i, int)) for i in range(batch)]
+
+
 def evaluate_layout(pos, edges, *, radius: float = 0.5,
                     ideal_angle=DEFAULT_IDEAL, method: str = "enhanced",
                     metrics=ALL_METRICS, n_strips: int = 64,
-                    orientation: str = "both") -> ReadabilityReport:
+                    orientation: str = "both",
+                    use_kernels: bool = False) -> ReadabilityReport:
     """Evaluate readability metrics of a layout.
 
     Args:
@@ -54,45 +106,39 @@ def evaluate_layout(pos, edges, *, radius: float = 0.5,
       radius: node disc radius (occlusion threshold is 2*radius).
       ideal_angle: ideal crossing angle in radians (default 70 deg).
       method: 'exact' (all-pairs, paper S3.1) or 'enhanced' (grid/strips,
-        paper S3.2).
+        paper S3.2; fused engine).
       metrics: subset of ALL_METRICS to compute.
       n_strips: strip count for the enhanced crossing algorithms.
       orientation: 'vertical' | 'horizontal' | 'both' (enhanced only).
+      use_kernels: route the enhanced reversal sweep through the Pallas
+        TPU kernel (interpret mode off-TPU).
     """
     pos = jnp.asarray(pos, jnp.float32)
     edges = jnp.asarray(edges, jnp.int32)
-    out = {}
-    overflow = 0
 
+    if method != "exact":
+        plan = engine.plan_readability(
+            pos, edges, radius=radius, ideal_angle=float(ideal_angle),
+            n_strips=n_strips, orientation=orientation,
+            metrics=tuple(metrics))
+        # eager on purpose: the plan is data-derived, so a jitted call
+        # would recompile per layout (see module docstring)
+        res = engine.evaluate_once(plan, pos, edges,
+                                   use_kernels=use_kernels)
+        return report_from_result(res)
+
+    out = {}
     if "node_occlusion" in metrics:
-        if method == "exact":
-            out["node_occlusion"] = int(count_occlusions_exact(pos, radius))
-        else:
-            c, ov = count_occlusions_enhanced(pos, radius)
-            out["node_occlusion"] = int(c)
-            overflow += int(ov)
+        out["node_occlusion"] = int(count_occlusions_exact(pos, radius))
     if "minimum_angle" in metrics:
         m_a, _ = minimum_angle(pos, edges)
         out["minimum_angle"] = float(m_a)
     if "edge_length_variation" in metrics:
         out["edge_length_variation"] = float(edge_length_variation(pos, edges))
     if "edge_crossing" in metrics:
-        if method == "exact":
-            out["edge_crossing"] = int(count_crossings_exact(pos, edges))
-        else:
-            c, ov = count_crossings_enhanced(pos, edges, n_strips=n_strips,
-                                             orientation=orientation)
-            out["edge_crossing"] = int(c)
-            overflow += int(ov)
+        out["edge_crossing"] = int(count_crossings_exact(pos, edges))
     if "edge_crossing_angle" in metrics:
-        if method == "exact":
-            e_ca, count, _ = crossing_angle_exact(pos, edges, ideal=ideal_angle)
-        else:
-            e_ca, count, _, ov = crossing_angle_enhanced(
-                pos, edges, n_strips=n_strips, ideal=ideal_angle,
-                orientation=orientation)
-            overflow += int(ov)
+        e_ca, count, _ = crossing_angle_exact(pos, edges, ideal=ideal_angle)
         out["edge_crossing_angle"] = float(e_ca)
         out["crossing_count_for_angle"] = int(count)
-
-    return ReadabilityReport(overflow=overflow, **out)
+    return ReadabilityReport(overflow=0, **out)

@@ -55,15 +55,16 @@ def count_occlusions_exact(pos: jax.Array, radius, *, block: int = 1024,
 
 
 def count_occlusions_gridded(pos: jax.Array, radius, origin, nx: int, ny: int,
-                             cap: int, *, valid=None,
-                             cell_block: int = 512) -> jax.Array:
+                             cap: int, *, valid=None, cell_block: int = 512,
+                             cell_size=None) -> jax.Array:
     """Enhanced N_c on a pre-planned grid (jit-friendly; static nx/ny/cap).
 
-    Exact: cell size 2r bounds the interaction radius, so every occluding
-    pair lands in the same cell or in a half-neighbourhood pair.
+    Exact: the cell size (>= 2r, default 2r) bounds the interaction
+    radius, so every occluding pair lands in the same cell or in a
+    half-neighbourhood pair.
     """
     buckets = gridlib.build_cell_buckets(pos, radius, origin, nx, ny, cap,
-                                         valid=valid)
+                                         valid=valid, cell_size=cell_size)
     nbr = gridlib.neighbour_bucket_ids(nx, ny)            # (C, 4)
     n_cells = nx * ny
     thresh = jnp.asarray((2.0 * radius) ** 2, pos.dtype)
@@ -119,8 +120,8 @@ def _cross_count(bx, by, bv, cx, cy, cv, thresh):
 def count_occlusions_enhanced(pos, radius, *, valid=None, cell_block: int = 512):
     """Host-facing enhanced N_c: plans the grid from the data, then runs the
     gridded counter. Returns (count, overflow)."""
-    origin, nx, ny, cap = gridlib.plan_occlusion_grid(pos, radius)
+    origin, nx, ny, cap, size = gridlib.plan_occlusion_grid(pos, radius)
     count, overflow = count_occlusions_gridded(
         jnp.asarray(pos), radius, origin, nx, ny, cap, valid=valid,
-        cell_block=min(cell_block, nx * ny))
+        cell_block=min(cell_block, nx * ny), cell_size=size)
     return count, overflow

@@ -21,6 +21,7 @@ import jax.numpy as jnp
 from jax import lax
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro.core.engine import fused_reversal_block
 from repro.core.grid import SegmentBuckets
 
 
@@ -43,7 +44,12 @@ def _pad_strips(buckets: SegmentBuckets, n_dev: int):
 
 def sharded_reversal_stats(mesh: Mesh, buckets: SegmentBuckets, *,
                            ideal_angle=None, strip_block: int = 64):
-    """Strip-sharded crossing count (+ optional angle deviation sum)."""
+    """Strip-sharded crossing count (+ optional angle deviation sum).
+
+    The per-strip pair block is the engine's
+    :func:`~repro.core.engine.fused_reversal_block` — the same traced
+    formula as the single-device enhanced path, so the two can never
+    drift."""
     axes = tuple(mesh.axis_names)
     n_dev = mesh.size
     buckets, n_strips = _pad_strips(buckets, n_dev)
@@ -57,22 +63,9 @@ def sharded_reversal_stats(mesh: Mesh, buckets: SegmentBuckets, *,
         def block_fn(s0):
             sl = lambda a: lax.dynamic_slice_in_dim(
                 a, s0, min(strip_block, per), axis=0)
-            byl, byr, bth = sl(yl), sl(yr), sl(th)
-            bv, bu, bok = sl(v), sl(u), sl(ok)
-            rev = (byl[:, :, None] < byl[:, None, :]) \
-                & (byr[:, :, None] > byr[:, None, :])
-            shared = ((bv[:, :, None] == bv[:, None, :]) |
-                      (bv[:, :, None] == bu[:, None, :]) |
-                      (bu[:, :, None] == bv[:, None, :]) |
-                      (bu[:, :, None] == bu[:, None, :]))
-            mask = rev & ~shared & bok[:, :, None] & bok[:, None, :]
-            cnt = jnp.sum(jnp.where(mask, 1, 0))
-            if not want_angle:
-                return cnt, jnp.zeros((), jnp.float32)
-            d = jnp.abs(bth[:, :, None] - bth[:, None, :])
-            a_c = jnp.minimum(d, jnp.pi - d)
-            dev = jnp.abs(ideal - a_c) / ideal
-            return cnt, jnp.sum(jnp.where(mask, dev, 0.0))
+            return fused_reversal_block(sl(yl), sl(yr), sl(th), sl(v),
+                                        sl(u), sl(ok), ideal=ideal,
+                                        with_angle=want_angle)
 
         starts = jnp.arange(0, per, min(strip_block, per), dtype=jnp.int32)
         counts, devs = lax.map(block_fn, starts)
@@ -91,34 +84,28 @@ def sharded_reversal_stats(mesh: Mesh, buckets: SegmentBuckets, *,
 
 
 def lower_sharded_reversal(mesh: Mesh, n_strips: int, cap: int, *,
-                           strip_block: int = 64, with_angle: bool = False):
+                           strip_block: int = 64, with_angle: bool = False,
+                           ideal_angle=None):
     """Build + lower the strip-sharded enhanced crossing counter for
-    abstract bucket inputs (dry run at full problem size)."""
+    abstract bucket inputs (dry run at full problem size).
+
+    Shares :func:`~repro.core.engine.fused_reversal_block` with the
+    executable paths (this used to hand-roll the deviation without the
+    ``/ ideal`` normalization — unified so the formula cannot drift)."""
     axes = tuple(mesh.axis_names)
     n_dev = mesh.size
     n_strips_pad = -(-n_strips // n_dev) * n_dev
     per = n_strips_pad // n_dev
-    ideal = jnp.asarray(1.0, jnp.float32)
+    ideal = jnp.asarray(1.0 if ideal_angle is None else ideal_angle,
+                        jnp.float32)
 
     def shard_fn(yl, yr, th, v, u, ok):
         def block_fn(s0):
             sl = lambda a: lax.dynamic_slice_in_dim(
                 a, s0, min(strip_block, per), axis=0)
-            byl, byr, bth = sl(yl), sl(yr), sl(th)
-            bv, bu, bok = sl(v), sl(u), sl(ok)
-            rev = (byl[:, :, None] < byl[:, None, :]) \
-                & (byr[:, :, None] > byr[:, None, :])
-            shared = ((bv[:, :, None] == bv[:, None, :]) |
-                      (bv[:, :, None] == bu[:, None, :]) |
-                      (bu[:, :, None] == bv[:, None, :]) |
-                      (bu[:, :, None] == bu[:, None, :]))
-            mask = rev & ~shared & bok[:, :, None] & bok[:, None, :]
-            cnt = jnp.sum(jnp.where(mask, 1, 0))
-            if not with_angle:
-                return cnt, jnp.zeros((), jnp.float32)
-            d = jnp.abs(bth[:, :, None] - bth[:, None, :])
-            a_c = jnp.minimum(d, jnp.pi - d)
-            return cnt, jnp.sum(jnp.where(mask, jnp.abs(ideal - a_c), 0.0))
+            return fused_reversal_block(sl(yl), sl(yr), sl(th), sl(v),
+                                        sl(u), sl(ok), ideal=ideal,
+                                        with_angle=with_angle)
 
         starts = jnp.arange(0, per, min(strip_block, per), dtype=jnp.int32)
         counts, devs = lax.map(block_fn, starts)

@@ -36,7 +36,10 @@ def _reversal_kernel(yl_ref, yr_ref, th_ref, v_ref, u_ref, ok_ref,
         th = th_ref[0]
         d = jnp.abs(th[:, None] - th[None, :])
         a_c = jnp.minimum(d, jnp.pi - d)
-        dev = jnp.abs(ideal - a_c) * (1.0 / ideal)
+        # same formula as repro.core.engine.fused_reversal_block: a true
+        # division, not a reciprocal multiply (keeps rounding aligned with
+        # the jnp reversal path)
+        dev = jnp.abs(ideal - a_c) / ideal
         dev_ref[0, 0] = jnp.sum(jnp.where(mask, dev, 0.0))
     else:
         dev_ref[0, 0] = 0.0
