@@ -26,14 +26,14 @@ os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=%d"
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.sharding import AxisType
 from repro.core import grid as gridlib
+from repro.distributed.compat import AxisType, make_mesh
 from repro.distributed.gridded import sharded_reversal_stats
 from repro.graphs.datasets import paper_graph
 from repro.graphs.layouts import random_layout
 
 n_dev = %d
-mesh = jax.make_mesh((n_dev,), ("data",), axis_types=(AxisType.Auto,))
+mesh = make_mesh((n_dev,), ("data",), axis_types=(AxisType.Auto,))
 edges_np, n_v = paper_graph("musae-facebook", seed=0, scale=%f)
 pos = jnp.asarray(random_layout(n_v, seed=1))
 edges = jnp.asarray(edges_np)

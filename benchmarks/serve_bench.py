@@ -1,0 +1,141 @@
+"""Serving benchmark: eager per-request server vs the session server.
+
+Compares, on steady-state mixed-size request streams at |V| in
+{200, 1k, 5k} (layout-local graphs, modest per-request perturbations —
+the 'score candidate layouts inside a generation loop' regime):
+
+  * the OLD eager path (``method="enhanced"``): host-side re-planning +
+    eager fused evaluation per request — what every request paid before
+    the session layer existed;
+  * the session server (``method="session"``): plan-cache + pow2 shape
+    buckets + padded jitted evaluation + same-bucket coalescing.  After a
+    warmup pass the stats counters must show ZERO replans and ZERO new
+    traces — steady state is pure jit-cache-hit dispatching.
+
+Writes BENCH_serve.json next to the repo root (the serving perf record).
+
+  PYTHONPATH=src python benchmarks/serve_bench.py
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import sys
+import time
+
+import jax
+import numpy as np
+
+sys.path.insert(0, os.path.dirname(__file__))
+from engine_bench import make_graph  # noqa: E402
+
+from repro.launch.serve import ReadabilityServer  # noqa: E402
+
+SIZES = (200, 1000, 5000)
+N_STRIPS = 128
+PER_SIZE = 2          # requests per size per mixed round
+WARMUP_ROUNDS = 2
+TIMED_ROUNDS = 8
+EAGER_REPS = 3
+SESSION_REPS = 5
+
+
+def perturbed(pos, rng, n_v):
+    sigma = 0.3 * 100.0 / np.sqrt(n_v)    # ~0.3 lattice spacings
+    return pos + rng.normal(0, sigma, pos.shape).astype(np.float32)
+
+
+def p50_ms(fn, reps):
+    times = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        fn()
+        times.append(time.perf_counter() - t0)
+    return float(np.median(times)) * 1e3
+
+
+def main():
+    graphs = {n: make_graph(n) for n in SIZES}
+    graphs = {n: (np.asarray(p), np.asarray(e)) for n, (p, e) in
+              graphs.items()}
+    rng = np.random.default_rng(0)
+    results = {"backend": jax.default_backend(), "n_strips": N_STRIPS,
+               "sizes": [], "stream": {}}
+
+    eager = ReadabilityServer(method="enhanced", n_strips=N_STRIPS)
+    sess = ReadabilityServer(method="session", n_strips=N_STRIPS)
+
+    def mixed_round(server):
+        reqs = [(perturbed(graphs[n][0], rng, n), graphs[n][1])
+                for n in SIZES for _ in range(PER_SIZE)]
+        return server.evaluate_batch(reqs)
+
+    # -- warmup the session server (compiles + plan cache fills) ----------
+    for _ in range(WARMUP_ROUNDS):
+        mixed_round(sess)
+    warm = dict(sess.stats)
+
+    # -- per-size p50 latency (single requests, steady state) -------------
+    for n in SIZES:
+        pos, edges = graphs[n]
+        t_eager = p50_ms(
+            lambda: eager.evaluate(perturbed(pos, rng, n), edges),
+            EAGER_REPS)
+        t_sess = p50_ms(
+            lambda: sess.evaluate(perturbed(pos, rng, n), edges),
+            SESSION_REPS)
+        rec = {"n_vertices": n, "n_edges": int(edges.shape[0]),
+               "eager_p50_ms": t_eager, "session_p50_ms": t_sess,
+               "speedup": t_eager / t_sess}
+        results["sizes"].append(rec)
+        print(f"|V|={n:5d}: eager {t_eager:8.1f} ms/req  "
+              f"session {t_sess:7.1f} ms/req  "
+              f"speedup {rec['speedup']:.1f}x", flush=True)
+
+    # -- mixed-size stream throughput (coalesced batches) -----------------
+    before = dict(sess.stats)
+    t0 = time.perf_counter()
+    for _ in range(TIMED_ROUNDS):
+        mixed_round(sess)
+    dt = time.perf_counter() - t0
+    after = dict(sess.stats)
+    n_reqs = TIMED_ROUNDS * PER_SIZE * len(SIZES)
+    delta = {k: after[k] - before[k] for k in
+             ("replans", "traces", "plan_misses", "dispatches", "requests",
+              "coalesced", "plan_hits")}
+    eager_ms_per_round = sum(PER_SIZE * r["eager_p50_ms"]
+                             for r in results["sizes"])
+    results["stream"] = {
+        "requests": n_reqs, "seconds": dt,
+        "requests_per_sec": n_reqs / dt,
+        "ms_per_request": dt / n_reqs * 1e3,
+        "eager_requests_per_sec_est": (PER_SIZE * len(SIZES))
+        / (eager_ms_per_round / 1e3),
+        "steady_state_counters": delta,
+        "warmup_stats": warm,
+    }
+    print(f"stream: {n_reqs} mixed requests in {dt:.2f}s "
+          f"({n_reqs / dt:.1f} req/s; eager est "
+          f"{results['stream']['eager_requests_per_sec_est']:.1f} req/s)")
+    print(f"steady-state counters: {delta}")
+
+    by_size = {r["n_vertices"]: r for r in results["sizes"]}
+    results["acceptance"] = {
+        "session_5x_faster_at_1k": by_size[1000]["speedup"] >= 5.0,
+        "zero_replans_after_warmup": delta["replans"] == 0,
+        "zero_retraces_after_warmup": delta["traces"] == 0,
+        "zero_plan_misses_after_warmup": delta["plan_misses"] == 0,
+        "stream_coalesces": delta["coalesced"] == delta["requests"],
+    }
+    out = os.path.join(os.path.dirname(__file__), "..", "BENCH_serve.json")
+    with open(os.path.abspath(out), "w") as f:
+        json.dump(results, f, indent=2)
+    print("acceptance:", results["acceptance"])
+    print(f"wrote {os.path.abspath(out)}")
+    if not all(results["acceptance"].values()):
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,9 +1,11 @@
 """Serve batched readability-evaluation requests (the paper's system as a
-service): shape-bucketed, jit-cached, enhanced algorithms by default.
+service): plan-cached, shape-bucketed, request-coalescing session server
+by default; round 2 of the stream is the steady state (zero replans, zero
+retraces — see the printed stats).
 
   PYTHONPATH=src python examples/serve_readability.py
 """
 
 from repro.launch.serve import main as serve_main
 
-serve_main(["--requests", "6", "--method", "enhanced"])
+serve_main(["--requests", "6", "--rounds", "2", "--method", "session"])

@@ -9,7 +9,8 @@ from repro.core.crossing_angle import (crossing_angle_enhanced,  # noqa: F401
 from repro.core.edge_length import edge_length_variation  # noqa: F401
 from repro.core.engine import (EngineResult, ReadabilityPlan,  # noqa: F401
                                evaluate_layouts, evaluate_once,
-                               evaluate_planned, plan_readability)
+                               evaluate_planned, plan_readability,
+                               replan_on_overflow)
 from repro.core.metrics import (ALL_METRICS, ReadabilityReport,  # noqa: F401
                                 evaluate_layout, report_from_result,
                                 reports_from_batch)

@@ -45,9 +45,33 @@ This module splits the work:
   ``examples/layout_optimization.py``).
 
 ``use_kernels=True`` routes the per-strip reversal sweep through the
-Pallas TPU kernel (:func:`repro.kernels.ops.strip_reversal_op`) instead
-of the blocked-``lax.map`` jnp path; counts are identical, the float
-deviation sum may differ in rounding (different summation order).
+Pallas TPU kernel (:func:`repro.kernels.ops.strip_reversal_op`) and the
+node-occlusion count through the tiled pairwise Pallas kernel
+(:func:`repro.kernels.ops.occlusion_count_op`; exact, so it agrees with
+the gridded count bit-for-bit) instead of the jnp paths; counts are
+identical, the float deviation sum may differ in rounding (different
+summation order).  The exact-method Pallas routes
+(``segment_crossing``, ``crossing_angle_sum``) hang off
+``evaluate_layout(method='exact', use_kernels=True)`` in
+:mod:`repro.core.metrics`.
+
+**Padding / bucketing contract** (the serving fast path, see
+:mod:`repro.launch.session`): the evaluators accept optional
+``n_valid_vertices`` / ``n_valid_edges`` *device* scalars.  When given,
+only ``pos[:n_valid_vertices]`` and ``edges[:n_valid_edges]`` exist as
+far as every metric is concerned — padded tail vertices are excluded from
+the occlusion grid and the M_a mean, padded tail edges from the strip
+build, M_a, M_l, and both crossing metrics.  Because the scalars are
+traced (not static), ONE plan + ONE jit cache entry serves every graph of
+one topology padded up to its shape bucket, whatever its natural size.
+Integer metrics (N_c, E_c) are bit-identical between natural-size and
+bucket-padded evaluation; float metrics agree to rounding (different
+reduction shapes).  Padded vertices should be parked outside the layout
+extent (see ``session.PARK``), but correctness rests on the masks, not
+the park position.  If a drifting layout outgrows the plan's capacities
+the result's ``overflow`` counter reports it —
+:func:`replan_on_overflow` then grows the plan (fresh capacities from the
+offending layout, floored at ``growth`` x the old ones) for a retry.
 """
 
 from __future__ import annotations
@@ -261,30 +285,46 @@ def plan_readability(pos, edges, *, radius: float = 0.5, ideal_angle=None,
 # fused evaluation (one traced program, all metrics)
 # ---------------------------------------------------------------------------
 
-def _evaluate(plan: ReadabilityPlan, pos, edges,
-              use_kernels: bool) -> EngineResult:
+def _evaluate(plan: ReadabilityPlan, pos, edges, use_kernels: bool,
+              n_valid_vertices=None, n_valid_edges=None) -> EngineResult:
     global _trace_count
     if isinstance(pos, jax.core.Tracer):
         _trace_count += 1
     pos = jnp.asarray(pos, jnp.float32)
     edges = jnp.asarray(edges, jnp.int32)
+    vertex_valid = None
+    if n_valid_vertices is not None:
+        vertex_valid = (jnp.arange(pos.shape[0], dtype=jnp.int32)
+                        < jnp.asarray(n_valid_vertices, jnp.int32))
+    edge_valid = None
+    if n_valid_edges is not None:
+        edge_valid = (jnp.arange(edges.shape[0], dtype=jnp.int32)
+                      < jnp.asarray(n_valid_edges, jnp.int32))
     m = plan.metrics
     out = {}
     overflow = jnp.zeros((), jnp.int32)
 
     if "node_occlusion" in m:
-        cnt, ov = count_occlusions_gridded(
-            pos, plan.radius, plan.grid_origin, plan.grid_nx, plan.grid_ny,
-            plan.cell_cap,
-            cell_block=min(plan.cell_block, plan.grid_nx * plan.grid_ny),
-            cell_size=plan.grid_cell_size)
+        if use_kernels:
+            # exact tiled pairwise Pallas kernel: same count as the grid
+            # (paper Table 3: enhanced N_c has 0% error), no capacities to
+            # overflow
+            from repro.kernels.ops import occlusion_count_op
+            cnt = occlusion_count_op(pos, plan.radius, valid=vertex_valid)
+        else:
+            cnt, ov = count_occlusions_gridded(
+                pos, plan.radius, plan.grid_origin, plan.grid_nx,
+                plan.grid_ny, plan.cell_cap, valid=vertex_valid,
+                cell_block=min(plan.cell_block, plan.grid_nx * plan.grid_ny),
+                cell_size=plan.grid_cell_size)
+            overflow = overflow + ov
         out["node_occlusion"] = cnt
-        overflow = overflow + ov
     if "minimum_angle" in m:
-        m_a, _ = minimum_angle(pos, edges)
+        m_a, _ = minimum_angle(pos, edges, edge_valid=edge_valid)
         out["minimum_angle"] = m_a
     if "edge_length_variation" in m:
-        out["edge_length_variation"] = edge_length_variation(pos, edges)
+        out["edge_length_variation"] = edge_length_variation(
+            pos, edges, edge_valid=edge_valid)
 
     want_ec = "edge_crossing" in m
     want_eca = "edge_crossing_angle" in m
@@ -294,7 +334,8 @@ def _evaluate(plan: ReadabilityPlan, pos, edges,
             # strip build + bucketing happen ONCE per orientation; the one
             # fused sweep serves both E_c and E_ca
             segs = gridlib.build_strip_segments(
-                pos, edges, plan.n_strips, max_segments, axis=axis)
+                pos, edges, plan.n_strips, max_segments, axis=axis,
+                edge_valid=edge_valid)
             buckets = gridlib.bucketize_segments(segs, plan.n_strips, cap)
             cnt, dev = fused_reversal_stats(
                 buckets, ideal=plan.ideal,
@@ -303,7 +344,7 @@ def _evaluate(plan: ReadabilityPlan, pos, edges,
             stats.append((cnt, dev, buckets.overflow))
         if len(stats) == 1:
             (ec_count, best_dev, ec_ov) = stats[0]
-            best_count, best_ov = ec_count, ec_ov
+            best_count = ec_count
         else:
             (c0, d0, o0), (c1, d1, o1) = stats
             ec_count = jnp.maximum(c0, c1)
@@ -314,21 +355,24 @@ def _evaluate(plan: ReadabilityPlan, pos, edges,
             take1 = c1 > c0
             best_count = jnp.where(take1, c1, c0)
             best_dev = jnp.where(take1, d1, d0)
-            best_ov = jnp.where(take1, o1, o0)
         if want_ec:
             out["edge_crossing"] = ec_count
-            overflow = overflow + ec_ov
         if want_eca:
             out["edge_crossing_angle"] = jnp.where(
                 best_count > 0,
                 1.0 - best_dev / jnp.maximum(best_count, 1), 1.0)
             out["crossing_count_for_angle"] = best_count
-            overflow = overflow + best_ov
+        # the strip decomposition is shared by E_c and E_ca, so its
+        # dropped segments count once, as the max over orientations —
+        # a starved *losing* orientation corrupts the best-orientation
+        # vote too, so its drops must still trip the replan signal
+        overflow = overflow + ec_ov
 
     return EngineResult(overflow=overflow, **out)
 
 
 def evaluate_once(plan: ReadabilityPlan, pos, edges, *,
+                  n_valid_vertices=None, n_valid_edges=None,
                   use_kernels: bool = False) -> EngineResult:
     """One fused evaluation, eagerly (no jit cache entry).
 
@@ -336,16 +380,21 @@ def evaluate_once(plan: ReadabilityPlan, pos, edges, *,
     right call when the plan is fresh-per-layout (e.g. the
     ``evaluate_layout`` compatibility wrapper), where jitting would
     recompile on every call and grow the jit cache without bound."""
-    return _evaluate(plan, pos, edges, use_kernels)
+    return _evaluate(plan, pos, edges, use_kernels,
+                     n_valid_vertices, n_valid_edges)
 
 
-def _evaluate_planned(plan, pos, edges, use_kernels=False):
-    return _evaluate(plan, pos, edges, use_kernels)
+def _evaluate_planned(plan, pos, edges, n_valid_vertices=None,
+                      n_valid_edges=None, use_kernels=False):
+    return _evaluate(plan, pos, edges, use_kernels,
+                     n_valid_vertices, n_valid_edges)
 
 
-def _evaluate_layouts(plan, batch_pos, edges, use_kernels=False):
+def _evaluate_layouts(plan, batch_pos, edges, n_valid_vertices=None,
+                      n_valid_edges=None, use_kernels=False):
     return jax.vmap(
-        lambda p: _evaluate(plan, p, edges, use_kernels))(batch_pos)
+        lambda p: _evaluate(plan, p, edges, use_kernels,
+                            n_valid_vertices, n_valid_edges))(batch_pos)
 
 
 evaluate_planned = jax.jit(_evaluate_planned,
@@ -353,10 +402,13 @@ evaluate_planned = jax.jit(_evaluate_planned,
 evaluate_planned.__doc__ = (
     """All five metrics for one layout under ``plan``, fused + jitted.
 
-    ``evaluate_planned(plan, pos, edges, use_kernels=False)`` ->
-    :class:`EngineResult` of device scalars (one transfer fetches all).
-    ``plan`` is static: repeated calls with the same plan and shapes hit
-    the jit cache.""")
+    ``evaluate_planned(plan, pos, edges, n_valid_vertices=None,
+    n_valid_edges=None, use_kernels=False)`` -> :class:`EngineResult` of
+    device scalars (one transfer fetches all).  ``plan`` is static:
+    repeated calls with the same plan and shapes hit the jit cache.  The
+    optional ``n_valid_*`` scalars are *traced*, so bucket-padded
+    requests of any natural size share one cache entry (see the module
+    docstring's padding contract).""")
 
 evaluate_layouts = jax.jit(_evaluate_layouts,
                            static_argnames=("plan", "use_kernels"))
@@ -364,4 +416,39 @@ evaluate_layouts.__doc__ = (
     """Batched evaluation: ``(B, V, 2)`` candidate layouts of one graph
     in a single vmapped dispatch. Returns an :class:`EngineResult` whose
     fields have a leading batch dimension. Plan with a batched ``pos``
-    (or any representative layout) via :func:`plan_readability`.""")
+    (or any representative layout) via :func:`plan_readability`.  The
+    optional traced ``n_valid_vertices`` / ``n_valid_edges`` scalars
+    apply to every batch member (coalesced serving requests share one
+    topology, hence one natural size).""")
+
+
+def replan_on_overflow(plan: ReadabilityPlan, pos, edges, result,
+                       *, growth: float = 1.5) -> ReadabilityPlan:
+    """Grow ``plan`` when ``result`` reports capacity overflow.
+
+    ``result`` is anything with an ``overflow`` attribute (an
+    :class:`EngineResult` or a host-side report).  Returns ``plan``
+    unchanged when nothing overflowed.  Otherwise re-plans from the
+    concrete offending layout (``pos``/``edges`` — pass the *natural*,
+    unpadded arrays) and floors every capacity at ``growth`` x the old
+    plan's, so the retry can neither overflow on the same data nor
+    shrink below what previous traffic needed."""
+    ov = result.overflow
+    # max() handles batched results ((B,)-shaped overflow from
+    # evaluate_layouts) as well as scalars and host-side report ints
+    if ov is None or int(np.max(jax.device_get(ov))) == 0:
+        return plan
+    fresh = plan_readability(
+        pos, edges, radius=plan.radius, ideal_angle=plan.ideal,
+        n_strips=plan.n_strips, orientation=plan.orientation,
+        metrics=plan.metrics, cell_block=plan.cell_block,
+        strip_block=plan.strip_block)
+    cell_cap = max(fresh.cell_cap,
+                   gridlib._round_up(int(plan.cell_cap * growth), 8))
+    strip_plans = tuple(
+        (max(f_ms, gridlib._round_up(int(o_ms * growth), 128)),
+         max(f_cap, gridlib._round_up(int(o_cap * growth), 8)))
+        for (f_ms, f_cap), (o_ms, o_cap) in zip(fresh.strip_plans,
+                                                plan.strip_plans))
+    return dataclasses.replace(fresh, cell_cap=cell_cap,
+                               strip_plans=strip_plans)

@@ -320,7 +320,13 @@ def plan_occlusion_grid(pos, radius, pad: int = 8, cap_multiple: int = 8,
 
 def plan_strips(pos, edges, n_strips: int, pad: float = 1.25,
                 cap_multiple: int = 8, axis: int = 0):
-    """Pick max_segments and per-strip capacity from concrete data."""
+    """Pick max_segments and per-strip capacity from concrete data.
+
+    Both the total segment budget and the per-strip capacity carry the
+    ``pad`` headroom factor, so a plan made from one representative
+    layout keeps serving perturbed siblings (batched candidates, drifting
+    optimization iterates, padded serving traffic) without tripping the
+    overflow counter."""
     import numpy as np
 
     pos = np.asarray(pos)
@@ -336,7 +342,7 @@ def plan_strips(pos, edges, n_strips: int, pad: float = 1.25,
     s_last = np.clip(np.floor((xb - lo) / width).astype(np.int64) - 1, -1, n_strips - 1)
     n_seg = np.maximum(0, s_last - s_first + 1)
     total = int(n_seg.sum())
-    max_segments = _round_up(max(total, 1), 128)
+    max_segments = _round_up(max(int(total * pad), 1) + 64, 128)
     per_strip = np.zeros(n_strips, dtype=np.int64)
     # exact per-strip occupancy via difference array
     first = s_first[n_seg > 0]

@@ -110,8 +110,10 @@ def evaluate_layout(pos, edges, *, radius: float = 0.5,
       metrics: subset of ALL_METRICS to compute.
       n_strips: strip count for the enhanced crossing algorithms.
       orientation: 'vertical' | 'horizontal' | 'both' (enhanced only).
-      use_kernels: route the enhanced reversal sweep through the Pallas
-        TPU kernel (interpret mode off-TPU).
+      use_kernels: route the metric inner loops through the Pallas TPU
+        kernels (interpret mode off-TPU): enhanced -> strip reversal +
+        pairwise occlusion; exact -> pairwise occlusion, CCW segment
+        crossing, fused crossing-angle.
     """
     pos = jnp.asarray(pos, jnp.float32)
     edges = jnp.asarray(edges, jnp.int32)
@@ -127,18 +129,33 @@ def evaluate_layout(pos, edges, *, radius: float = 0.5,
                                    use_kernels=use_kernels)
         return report_from_result(res)
 
+    if use_kernels:
+        from repro.kernels.ops import (crossing_angle_op, crossing_count_op,
+                                       occlusion_count_op)
     out = {}
     if "node_occlusion" in metrics:
-        out["node_occlusion"] = int(count_occlusions_exact(pos, radius))
+        out["node_occlusion"] = int(occlusion_count_op(pos, radius)
+                                    if use_kernels
+                                    else count_occlusions_exact(pos, radius))
     if "minimum_angle" in metrics:
         m_a, _ = minimum_angle(pos, edges)
         out["minimum_angle"] = float(m_a)
     if "edge_length_variation" in metrics:
         out["edge_length_variation"] = float(edge_length_variation(pos, edges))
     if "edge_crossing" in metrics:
-        out["edge_crossing"] = int(count_crossings_exact(pos, edges))
+        out["edge_crossing"] = int(crossing_count_op(pos, edges)
+                                   if use_kernels
+                                   else count_crossings_exact(pos, edges))
     if "edge_crossing_angle" in metrics:
-        e_ca, count, _ = crossing_angle_exact(pos, edges, ideal=ideal_angle)
-        out["edge_crossing_angle"] = float(e_ca)
+        if use_kernels:
+            count, dev = crossing_angle_op(pos, edges,
+                                           ideal=float(ideal_angle))
+            count = int(count)
+            out["edge_crossing_angle"] = (
+                1.0 - float(dev) / count if count > 0 else 1.0)
+        else:
+            e_ca, count, _ = crossing_angle_exact(pos, edges,
+                                                  ideal=ideal_angle)
+            out["edge_crossing_angle"] = float(e_ca)
         out["crossing_count_for_angle"] = int(count)
     return ReadabilityReport(overflow=0, **out)

@@ -19,6 +19,8 @@ import jax.numpy as jnp
 from jax import lax
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro.distributed.compat import shard_map
+
 
 def merge_decode_attention(mesh: Mesh, q, k_cache, v_cache, pos, *,
                            seq_axis: str = "model"):
@@ -49,7 +51,7 @@ def merge_decode_attention(mesh: Mesh, q, k_cache, v_cache, pos, *,
         return o_star / jnp.maximum(l_star, 1e-30)[..., None].astype(o.dtype)
 
     other = tuple(a for a in mesh.axis_names if a != seq_axis)
-    fn = jax.shard_map(
+    fn = shard_map(
         shard_fn, mesh=mesh,
         in_specs=(P(), P(None, seq_axis), P(None, seq_axis), P()),
         out_specs=P(),
@@ -75,7 +77,7 @@ def sharded_embedding_lookup(mesh: Mesh, table, ids, *,
         rows = jnp.where(in_range[..., None], rows, 0.0)
         return lax.psum(rows, axis)
 
-    fn = jax.shard_map(shard_fn, mesh=mesh,
+    fn = shard_map(shard_fn, mesh=mesh,
                        in_specs=(P(axis, None), P()), out_specs=P(),
                        check_vma=False)
     return fn(table, ids)

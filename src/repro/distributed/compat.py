@@ -1,0 +1,48 @@
+"""jax version-compat shims for the distributed drivers.
+
+The drivers are written against the modern surface (``jax.shard_map`` with
+``check_vma``, ``jax.sharding.AxisType``, ``jax.make_mesh(...,
+axis_types=...)``).  The evaluation container pins jax 0.4.37, where
+``shard_map`` still lives in ``jax.experimental.shard_map`` (with the
+``check_rep`` spelling), ``AxisType`` does not exist, and ``make_mesh``
+takes no ``axis_types``.  Every distributed module imports these names
+from here so the drivers run unchanged on both sides of the rename.
+"""
+
+from __future__ import annotations
+
+import enum
+
+import jax
+
+try:  # jax >= 0.7-ish
+    from jax.sharding import AxisType  # noqa: F401
+except ImportError:  # 0.4.x stand-in: same member names, plain enum
+    class AxisType(enum.Enum):
+        Auto = "auto"
+        Explicit = "explicit"
+        Manual = "manual"
+
+
+if hasattr(jax, "shard_map"):
+    def shard_map(f, *, mesh, in_specs, out_specs, check_vma=False):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=check_vma)
+else:
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    def shard_map(f, *, mesh, in_specs, out_specs, check_vma=False):
+        # check_vma (value-and-replication checking) was called check_rep
+        # before the jax.shard_map promotion; semantics are compatible for
+        # the False setting the drivers use.
+        return _shard_map(f, mesh=mesh, in_specs=in_specs,
+                          out_specs=out_specs, check_rep=bool(check_vma))
+
+
+def make_mesh(axis_shapes, axis_names, *, axis_types=None, devices=None):
+    """``jax.make_mesh`` that tolerates the missing ``axis_types`` kwarg."""
+    try:
+        return jax.make_mesh(axis_shapes, axis_names, axis_types=axis_types,
+                             devices=devices)
+    except TypeError:  # jax 0.4.x: no axis_types parameter
+        return jax.make_mesh(axis_shapes, axis_names, devices=devices)

@@ -23,6 +23,7 @@ from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.core.engine import fused_reversal_block
 from repro.core.grid import SegmentBuckets
+from repro.distributed.compat import shard_map
 
 
 def _pad_strips(buckets: SegmentBuckets, n_dev: int):
@@ -72,7 +73,7 @@ def sharded_reversal_stats(mesh: Mesh, buckets: SegmentBuckets, *,
         return (lax.psum(jnp.sum(counts), axes),
                 lax.psum(jnp.sum(devs), axes))
 
-    fn = jax.shard_map(
+    fn = shard_map(
         shard_fn, mesh=mesh,
         in_specs=(P(axes), P(axes), P(axes), P(axes), P(axes), P(axes)),
         out_specs=(P(), P()), check_vma=False)
@@ -112,7 +113,7 @@ def lower_sharded_reversal(mesh: Mesh, n_strips: int, cap: int, *,
         return (lax.psum(jnp.sum(counts), axes),
                 lax.psum(jnp.sum(devs), axes))
 
-    fn = jax.shard_map(
+    fn = shard_map(
         shard_fn, mesh=mesh,
         in_specs=(P(axes), P(axes), P(axes), P(axes), P(axes), P(axes)),
         out_specs=(P(), P()), check_vma=False)

@@ -29,6 +29,7 @@ from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.core.geometry import (pair_dist_sq, segments_cross,
                                  segments_cross_bool)
+from repro.distributed.compat import shard_map
 
 
 def _flat_axes(mesh: Mesh):
@@ -76,7 +77,7 @@ def sharded_occlusion_count(mesh: Mesh, pos, radius, *, valid=None,
         local = jnp.sum(lax.map(row_block, starts))
         return lax.psum(local, axes)
 
-    fn = jax.shard_map(
+    fn = shard_map(
         shard_fn, mesh=mesh,
         in_specs=(P(axes), P(axes), P(axes), P(), P(), P()),
         out_specs=P(), check_vma=False)
@@ -125,7 +126,7 @@ def ring_occlusion_count(mesh: Mesh, pos, radius, *, valid=None):
         total, *_ = lax.fori_loop(0, n_dev, step, (total, xi, yi, oi))
         return lax.psum(total, axes)
 
-    fn = jax.shard_map(shard_fn, mesh=mesh,
+    fn = shard_map(shard_fn, mesh=mesh,
                        in_specs=(P(axes), P(axes), P(axes)), out_specs=P(), check_vma=False)
     return jax.jit(fn)(x.reshape(n_dev, per), y.reshape(n_dev, per),
                        ok.reshape(n_dev, per))
@@ -188,7 +189,7 @@ def sharded_crossing_count(mesh: Mesh, pos, edges, *, edge_valid=None,
 
     sharded = tuple(a.reshape(n_dev, per) for a in (*arrs, v, u, ok))
     rep = (*arrs, v, u, ok)
-    fn = jax.shard_map(shard_fn, mesh=mesh,
+    fn = shard_map(shard_fn, mesh=mesh,
                        in_specs=(tuple(P(axes) for _ in sharded),
                                  tuple(P() for _ in rep)),
                        out_specs=P(), check_vma=False)
@@ -225,7 +226,7 @@ def lower_sharded_occlusion(mesh: Mesh, n_vertices: int, radius: float, *,
         starts = jnp.arange(0, rows_per, block, dtype=jnp.int32)
         return lax.psum(jnp.sum(lax.map(row_block, starts)), axes)
 
-    fn = jax.shard_map(shard_fn, mesh=mesh,
+    fn = shard_map(shard_fn, mesh=mesh,
                        in_specs=(P(axes), P(axes), P(axes), P(), P(), P()),
                        out_specs=P(), check_vma=False)
     f32 = lambda s: jax.ShapeDtypeStruct(s, jnp.float32)
@@ -278,7 +279,7 @@ def lower_sharded_crossing(mesh: Mesh, n_edges: int, *, block: int = 256,
     b8r = lambda: jax.ShapeDtypeStruct((e_pad,), jnp.bool_)
     sh = (f32s(), f32s(), f32s(), f32s(), i32s(), i32s(), b8s())
     rep = (f32r(), f32r(), f32r(), f32r(), i32r(), i32r(), b8r())
-    fn = jax.shard_map(shard_fn, mesh=mesh,
+    fn = shard_map(shard_fn, mesh=mesh,
                        in_specs=(tuple(P(axes) for _ in sh),
                                  tuple(P() for _ in rep)),
                        out_specs=P(), check_vma=False)

@@ -18,9 +18,9 @@ collectives only.
 from __future__ import annotations
 
 import jax
-from jax.sharding import AxisType
 
 from repro.checkpoint.manager import CheckpointManager
+from repro.distributed.compat import AxisType, make_mesh
 
 
 def choose_mesh_shape(n_devices: int, *, max_model: int = 16):
@@ -35,8 +35,8 @@ def choose_mesh_shape(n_devices: int, *, max_model: int = 16):
 def make_elastic_mesh():
     n = len(jax.devices())
     shape = choose_mesh_shape(n)
-    return jax.make_mesh(shape, ("data", "model"),
-                         axis_types=(AxisType.Auto, AxisType.Auto))
+    return make_mesh(shape, ("data", "model"),
+                     axis_types=(AxisType.Auto, AxisType.Auto))
 
 
 def elastic_restore(directory: str, template, sharding_fn):

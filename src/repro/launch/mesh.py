@@ -9,14 +9,15 @@ leading pod axis: 2 x 16 x 16 = 512 chips.
 from __future__ import annotations
 
 import jax
-from jax.sharding import AxisType
+
+from repro.distributed.compat import AxisType, make_mesh
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes,
+                     axis_types=(AxisType.Auto,) * len(axes))
 
 
 def make_host_mesh(shape=None, axes=("data", "model")):
@@ -25,5 +26,5 @@ def make_host_mesh(shape=None, axes=("data", "model")):
     n = len(jax.devices())
     if shape is None:
         shape = (n, 1)
-    return jax.make_mesh(shape, axes,
-                         axis_types=(AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes,
+                     axis_types=(AxisType.Auto,) * len(axes))

@@ -1,10 +1,16 @@
 """Serving driver: batched readability evaluation *and* LM decode.
 
 The paper's system is an evaluation service: graph layouts come in,
-readability reports go out. ``ReadabilityServer`` is that service —
-batched, jit-cached per shape bucket, with the enhanced algorithms as the
-default engine. ``lm_generate`` drives the prefill+decode path for the LM
-archs (used by the serving smoke tests).
+readability reports go out.  ``ReadabilityServer`` is that service — a
+thin front over :class:`repro.launch.session.EvalSession`, which caches
+plans per (topology, shape bucket), pads requests into power-of-two
+buckets, coalesces same-bucket same-topology requests into single
+batched engine dispatches, and auto-replans (once) on capacity overflow.
+Steady-state traffic is zero-replan and zero-retrace; ``stats`` shows
+the counters.  ``method="enhanced"`` / ``"exact"`` keep the old
+per-request eager ``evaluate_layout`` path as a fallback.
+``lm_generate`` drives the prefill+decode path for the LM archs (used by
+the serving smoke tests).
 
   PYTHONPATH=src python -m repro.launch.serve --requests 8
 """
@@ -19,38 +25,61 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.metrics import ReadabilityReport, evaluate_layout
+from repro.launch.session import EvalSession
 
 
 class ReadabilityServer:
-    """Batched readability evaluation with shape bucketing.
+    """Batched readability evaluation with plan caching + shape bucketing.
 
-    Requests are (pos, edges) pairs; shapes are padded up to power-of-two
-    buckets so repeated traffic hits the jit cache (the serving analogue
-    of the paper's 'evaluate many layouts quickly' use case).
+    Requests are (pos, edges) pairs.  The default ``method="session"``
+    routes them through the fused engine's plan-once/evaluate-many path;
+    ``"enhanced"``/``"exact"`` fall back to the eager per-request
+    compatibility wrapper (the pre-session behavior, kept for parity
+    checks and as an escape hatch).
     """
 
-    def __init__(self, method: str = "enhanced", n_strips: int = 256):
+    # session kwargs that the eager evaluate_layout fallback understands
+    # (the rest — cache sizing, coalescing — only exist for sessions)
+    _FALLBACK_KWARGS = ("radius", "ideal_angle", "metrics", "orientation",
+                        "use_kernels")
+
+    def __init__(self, method: str = "session", n_strips: int = 256,
+                 **session_kwargs):
         self.method = method
         self.n_strips = n_strips
-        self.stats = {"requests": 0, "evals": 0}
+        self.session = (EvalSession(n_strips=n_strips, **session_kwargs)
+                        if method == "session" else None)
+        self._eval_kwargs = {k: v for k, v in session_kwargs.items()
+                             if k in self._FALLBACK_KWARGS}
+        self._stats = {"requests": 0, "evals": 0}
 
-    def _bucket(self, n: int) -> int:
-        b = 128
-        while b < n:
-            b *= 2
-        return b
+    @property
+    def stats(self):
+        """Request counters, merged with the session's plan-cache
+        hit/miss, coalescing, replan, and trace counters."""
+        s = dict(self._stats)
+        if self.session is not None:
+            s.update(self.session.stats)
+            s["plan_cache_entries"] = len(self.session.plans)
+            s["plan_cache_evictions"] = self.session.plans.evictions
+        return s
 
     def evaluate(self, pos, edges) -> ReadabilityReport:
-        self.stats["requests"] += 1
-        pos = np.asarray(pos, np.float32)
-        edges = np.asarray(edges, np.int32)
-        report = evaluate_layout(pos, edges, method=self.method,
-                                 n_strips=self.n_strips)
-        self.stats["evals"] += 1
-        return report
+        return self.evaluate_batch([(pos, edges)])[0]
 
     def evaluate_batch(self, requests):
-        return [self.evaluate(pos, edges) for pos, edges in requests]
+        self._stats["requests"] += len(requests)
+        if self.session is not None:
+            reports = self.session.evaluate_batch(requests)
+        else:
+            reports = [
+                evaluate_layout(np.asarray(pos, np.float32),
+                                np.asarray(edges, np.int32),
+                                method=self.method, n_strips=self.n_strips,
+                                **self._eval_kwargs)
+                for pos, edges in requests]
+        self._stats["evals"] += len(requests)
+        return reports
 
 
 def lm_generate(params, cfg, prompt_tokens, n_new: int):
@@ -74,13 +103,18 @@ def lm_generate(params, cfg, prompt_tokens, n_new: int):
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--requests", type=int, default=8)
-    ap.add_argument("--method", default="enhanced")
+    ap.add_argument("--method", default="session",
+                    choices=("session", "enhanced", "exact"))
+    ap.add_argument("--rounds", type=int, default=2,
+                    help="times the request stream repeats (round 2+ is "
+                         "the steady state: all plans cached)")
     args = ap.parse_args(argv)
 
     from repro.graphs.datasets import random_edges
     from repro.graphs.layouts import random_layout
 
     server = ReadabilityServer(method=args.method)
+    rounds = max(args.rounds, 1)
     rng = np.random.default_rng(0)
     reqs = []
     for i in range(args.requests):
@@ -89,14 +123,26 @@ def main(argv=None):
         reqs.append((random_layout(n_v, seed=i), random_edges(n_v, n_e,
                                                               seed=i)))
     t0 = time.time()
-    reports = server.evaluate_batch(reqs)
+    for r in range(rounds):
+        reports = server.evaluate_batch(
+            [(pos + rng.normal(0, 0.1, pos.shape).astype(np.float32), e)
+             for pos, e in reqs] if r else reqs)
     dt = time.time() - t0
     for i, r in enumerate(reports):
         print(f"req {i}: N_c={r.node_occlusion} E_c={r.edge_crossing} "
               f"M_a={r.minimum_angle:.3f} M_l={r.edge_length_variation:.3f} "
               f"E_ca={r.edge_crossing_angle:.3f}")
-    print(f"{args.requests} requests in {dt:.2f}s "
-          f"({dt / args.requests * 1e3:.0f} ms/req)")
+    n_total = args.requests * rounds
+    print(f"{n_total} requests in {dt:.2f}s "
+          f"({dt / n_total * 1e3:.0f} ms/req incl. warmup compiles)")
+    stats = server.stats
+    if "plan_hits" in stats:
+        print(f"stats: plan_hits={stats['plan_hits']} "
+              f"plan_misses={stats['plan_misses']} "
+              f"dispatches={stats['dispatches']} "
+              f"coalesced={stats['coalesced']} "
+              f"replans={stats['replans']} traces={stats['traces']} "
+              f"cache_entries={stats['plan_cache_entries']}")
 
 
 if __name__ == "__main__":

@@ -100,12 +100,15 @@ def unfused_reference(pos, edges, orientation="both"):
     for cand in angle[1:]:
         if int(cand[1]) > int(best[1]):
             best = cand
-    e_ca, cnt, _, eca_ov = best
+    e_ca, cnt, _, _ = best
+    # overflow reference: the engine's strip decomposition is shared by
+    # E_c and E_ca, so dropped segments count ONCE (max over
+    # orientations), not once per metric
     return dict(node_occlusion=int(occ), minimum_angle=float(m_a),
                 edge_length_variation=float(m_l), edge_crossing=e_c,
                 edge_crossing_angle=float(e_ca),
                 crossing_count_for_angle=int(cnt),
-                overflow=int(occ_ov) + ec_ov + int(eca_ov))
+                overflow=int(occ_ov) + ec_ov)
 
 
 @pytest.mark.parametrize("orientation", ["both", "vertical"])
@@ -139,15 +142,16 @@ def test_evaluate_layout_wrapper_matches_old_eager_path(graph):
     m_a, _ = minimum_angle(pos, edges)
     m_l = edge_length_variation(pos, edges)
     e_c, ec_ov = count_crossings_enhanced(pos, edges, n_strips=N_STRIPS)
-    e_ca, cnt, _, eca_ov = crossing_angle_enhanced(pos, edges,
-                                                   n_strips=N_STRIPS)
+    e_ca, cnt, _, _ = crossing_angle_enhanced(pos, edges,
+                                              n_strips=N_STRIPS)
     assert rep.node_occlusion == int(occ)
     assert rep.minimum_angle == float(m_a)
     assert rep.edge_length_variation == float(m_l)
     assert rep.edge_crossing == int(e_c)
     assert rep.edge_crossing_angle == float(e_ca)
     assert rep.crossing_count_for_angle == int(cnt)
-    assert rep.overflow == int(occ_ov) + int(ec_ov) + int(eca_ov)
+    # shared strip decomposition: dropped segments count once
+    assert rep.overflow == int(occ_ov) + int(ec_ov)
 
 
 def test_batched_matches_looped(graph):
@@ -213,6 +217,71 @@ def test_use_kernels_parity():
     assert int(got.node_occlusion) == int(ref.node_occlusion)
     np.testing.assert_allclose(float(got.edge_crossing_angle),
                                float(ref.edge_crossing_angle), rtol=1e-6)
+
+
+def test_padded_evaluation_exact(graph):
+    """Bucket-padded evaluation (padded vertices parked + masked, padded
+    edges masked) is exact: integer metrics bit-identical to the
+    natural-size evaluation under the same plan, floats to rounding."""
+    from repro.launch.session import PARK, pow2_bucket
+    pos, edges = graph
+    n_v, n_e = pos.shape[0], edges.shape[0]
+    plan = plan_readability(pos, edges, radius=RADIUS, n_strips=N_STRIPS)
+    nat = evaluate_planned(plan, pos, edges)
+    vb = pow2_bucket(n_v + 1)     # n_v+1 forces a genuinely bigger bucket
+    eb = pow2_bucket(n_e + 1)
+    pos_p = np.full((vb, 2), PARK, np.float32)
+    pos_p[:n_v] = np.asarray(pos)
+    edges_p = np.zeros((eb, 2), np.int32)
+    edges_p[:n_e] = np.asarray(edges)
+    got = evaluate_planned(plan, jnp.asarray(pos_p), jnp.asarray(edges_p),
+                           np.int32(n_v), np.int32(n_e))
+    assert int(got.node_occlusion) == int(nat.node_occlusion)
+    assert int(got.edge_crossing) == int(nat.edge_crossing)
+    assert int(got.crossing_count_for_angle) == \
+        int(nat.crossing_count_for_angle)
+    assert int(got.overflow) == int(nat.overflow)
+    np.testing.assert_allclose(float(got.minimum_angle),
+                               float(nat.minimum_angle), rtol=1e-6)
+    np.testing.assert_allclose(float(got.edge_length_variation),
+                               float(nat.edge_length_variation), rtol=1e-6)
+    np.testing.assert_allclose(float(got.edge_crossing_angle),
+                               float(nat.edge_crossing_angle), rtol=1e-6)
+
+
+def test_replan_on_overflow_roundtrip():
+    """A capacity-starved plan reports overflow; replan_on_overflow grows
+    it so the retry is overflow-free and exact."""
+    import dataclasses
+    pos, edges = make_layout("random")
+    plan = plan_readability(pos, edges, radius=RADIUS, n_strips=N_STRIPS)
+    want = evaluate_planned(plan, pos, edges)
+    starved = dataclasses.replace(
+        plan, strip_plans=tuple((128, 8) for _ in plan.strip_plans))
+    res = evaluate_planned(starved, pos, edges)
+    assert int(res.overflow) > 0
+    grown = engine.replan_on_overflow(starved, pos, edges, res)
+    assert grown.strip_plans != starved.strip_plans
+    res2 = evaluate_planned(grown, pos, edges)
+    assert int(res2.overflow) == 0
+    assert int(res2.edge_crossing) == int(want.edge_crossing)
+    # no overflow -> the plan comes back unchanged (same object)
+    assert engine.replan_on_overflow(grown, pos, edges, res2) is grown
+
+
+def test_exact_method_kernel_routing():
+    """method='exact' with use_kernels=True runs the Pallas pairwise
+    occlusion, CCW segment-crossing, and fused crossing-angle kernels
+    (interpret mode on CPU): counts identical, floats to rounding."""
+    pos, edges = make_layout("random")
+    ref = evaluate_layout(pos, edges, radius=RADIUS, method="exact")
+    got = evaluate_layout(pos, edges, radius=RADIUS, method="exact",
+                          use_kernels=True)
+    assert got.node_occlusion == ref.node_occlusion
+    assert got.edge_crossing == ref.edge_crossing
+    assert got.crossing_count_for_angle == ref.crossing_count_for_angle
+    np.testing.assert_allclose(got.edge_crossing_angle,
+                               ref.edge_crossing_angle, rtol=1e-5)
 
 
 def test_metric_subsets():

@@ -1,0 +1,189 @@
+"""Serving-session behavior: plan-cache hits with zero retraces on
+steady-state traffic, cross-request coalescing, padded-bucket exactness
+through the public API, overflow -> auto-replan -> retry, and the
+ReadabilityServer smoke path on mixed-size request streams."""
+
+import numpy as np
+
+from repro.core import engine
+from repro.core import grid as gridlib
+from repro.launch.serve import ReadabilityServer
+from repro.launch.session import EvalSession, PlanCache, pow2_bucket
+
+N_STRIPS = 64
+RADIUS = 2.0
+
+
+def lattice_graph(side=16, seed=0):
+    """Jittered lattice with lattice-neighbour edges: short edges, so
+    strip capacities planned on it are tight (the overflow test's bait)."""
+    rng = np.random.default_rng(seed)
+    n = side * side
+    xs, ys = np.meshgrid(np.arange(side), np.arange(side))
+    pos = np.stack([xs.ravel(), ys.ravel()], axis=1).astype(np.float32)
+    pos = pos * (100.0 / side)
+    pos = pos + rng.normal(0, 0.5, size=pos.shape).astype(np.float32)
+    right = np.stack([np.arange(n), np.arange(n) + 1], axis=1)
+    right = right[(right[:, 1] % side) != 0]
+    down = np.stack([np.arange(n), np.arange(n) + side], axis=1)
+    down = down[down[:, 1] < n]
+    edges = np.concatenate([right, down]).astype(np.int32)
+    return pos, edges
+
+
+def random_graph(n_v, n_e, seed=0):
+    rng = np.random.default_rng(seed)
+    pos = rng.uniform(0, 100, size=(n_v, 2)).astype(np.float32)
+    edges = set()
+    while len(edges) < n_e:
+        v, u = rng.integers(0, n_v, 2)
+        if v != u:
+            edges.add((min(v, u), max(v, u)))
+    return pos, np.array(sorted(edges), np.int32)
+
+
+def session(**kw):
+    kw.setdefault("radius", RADIUS)
+    kw.setdefault("n_strips", N_STRIPS)
+    return EvalSession(**kw)
+
+
+def test_pow2_bucket():
+    assert pow2_bucket(1) == 128
+    assert pow2_bucket(128) == 128
+    assert pow2_bucket(129) == 256
+    assert pow2_bucket(5000) == 8192
+    assert pow2_bucket(50, floor=64) == 64
+
+
+def test_plan_cache_lru_eviction():
+    cache = PlanCache(capacity=2)
+    cache.put("a", 1)
+    cache.put("b", 2)
+    assert cache.get("a") == 1          # refresh a: b is now LRU
+    cache.put("c", 3)
+    assert cache.get("b") is None       # evicted
+    assert cache.get("a") == 1
+    assert cache.get("c") == 3
+    assert cache.evictions == 1
+    assert (cache.hits, cache.misses) == (3, 1)
+
+
+def test_session_matches_engine_and_caches_plans():
+    """Padded + coalesced session results match direct jitted engine
+    evaluation (integer metrics bit-identical); repeat traffic is all
+    plan-cache hits with zero replans and zero new traces."""
+    pos, edges = random_graph(250, 500, seed=1)
+    rng = np.random.default_rng(2)
+    layouts = [(pos + rng.normal(0, 1.0, pos.shape).astype(np.float32))
+               for _ in range(4)]
+    sess = session()
+    reports = sess.evaluate_batch([(p, edges) for p in layouts])
+    assert sess.stats["plan_misses"] == 1
+    assert sess.stats["plan_hits"] == 0
+    assert sess.stats["coalesced"] == 4
+    assert sess.stats["dispatches"] == 1          # one batched dispatch
+    assert sess.stats["replans"] == 0
+
+    plan = engine.plan_readability(pos, edges, radius=RADIUS,
+                                   n_strips=N_STRIPS)
+    for p, rep in zip(layouts, reports):
+        want = engine.evaluate_planned(plan, p, edges)
+        assert rep.node_occlusion == int(want.node_occlusion)
+        assert rep.edge_crossing == int(want.edge_crossing)
+        assert rep.overflow == int(want.overflow) == 0
+        np.testing.assert_allclose(rep.edge_crossing_angle,
+                                   float(want.edge_crossing_angle),
+                                   rtol=1e-6)
+        np.testing.assert_allclose(rep.minimum_angle,
+                                   float(want.minimum_angle), rtol=1e-6)
+
+    # steady state: same bucket + topology -> cached plan, jit cache hit
+    traces = sess.stats["traces"]
+    builds = dict(gridlib.CALL_COUNTS)
+    again = sess.evaluate_batch([(p, edges) for p in layouts])
+    assert [r.edge_crossing for r in again] == \
+        [r.edge_crossing for r in reports]
+    assert sess.stats["plan_hits"] == 1
+    assert sess.stats["traces"] == traces          # no retrace
+    assert gridlib.CALL_COUNTS == builds           # no strip rebuilds
+    assert sess.stats["replans"] == 0
+
+
+def test_session_mixed_sizes_keep_separate_plans():
+    sess = session()
+    a = random_graph(150, 300, seed=3)
+    b = random_graph(600, 1200, seed=4)
+    reports = sess.evaluate_batch([a, b, a, b])
+    assert sess.stats["plan_misses"] == 2          # one per topology group
+    assert sess.stats["dispatches"] == 2
+    assert sess.stats["coalesced"] == 4
+    assert reports[0].edge_crossing == reports[2].edge_crossing
+    assert reports[1].edge_crossing == reports[3].edge_crossing
+    assert len(sess.plans) == 2
+
+
+def test_overflow_auto_replan_retry():
+    """A layout that outgrows the cached plan trips overflow; the session
+    replans (once), retries, and returns the exact result."""
+    pos_a, edges = lattice_graph()
+    # same topology, scrambled positions: edges become long, so the
+    # lattice-planned strip capacities are far too small
+    pos_b = np.random.default_rng(5).uniform(
+        0, 100, pos_a.shape).astype(np.float32)
+    sess = session()
+    sess.evaluate(pos_a, edges)
+    assert sess.stats["replans"] == 0
+    # the starved plan really does overflow on the scrambled layout
+    plan_a = sess.plans.get(next(iter(sess.plans._entries)))
+    starved = engine.evaluate_once(plan_a, pos_b, edges)
+    assert int(starved.overflow) > 0
+
+    rep = sess.evaluate(pos_b, edges)
+    assert sess.stats["replans"] == 1
+    assert rep.overflow == 0
+    ref_plan = engine.plan_readability(pos_b, edges, radius=RADIUS,
+                                       n_strips=N_STRIPS)
+    ref = engine.evaluate_planned(ref_plan, pos_b, edges)
+    assert rep.edge_crossing == int(ref.edge_crossing)
+    assert rep.node_occlusion == int(ref.node_occlusion)
+    # the grown plan is cached: evaluating the big layout again neither
+    # replans nor overflows
+    rep2 = sess.evaluate(pos_b, edges)
+    assert sess.stats["replans"] == 1
+    assert rep2.overflow == 0
+    assert rep2.edge_crossing == rep.edge_crossing
+
+
+def test_server_smoke_mixed_size_stream():
+    """Tier-1 smoke: the default (session) server on 4 mixed-size
+    requests — the serve path can never silently rot again."""
+    reqs = []
+    small = random_graph(100, 200, seed=6)
+    reqs.append(small)
+    reqs.append(random_graph(200, 400, seed=7))
+    reqs.append((small[0] + 1.0, small[1]))        # coalesces with req 0
+    reqs.append(random_graph(300, 600, seed=8))
+    server = ReadabilityServer(n_strips=N_STRIPS, radius=RADIUS)
+    reports = server.evaluate_batch(reqs)
+    assert len(reports) == 4
+    for r in reports:
+        assert r.node_occlusion >= 0
+        assert r.edge_crossing >= 0
+        assert 0.0 <= r.minimum_angle <= 1.0
+        assert 0.0 <= r.edge_crossing_angle <= 1.0
+        assert r.overflow == 0
+    stats = server.stats
+    assert stats["requests"] == 4
+    assert stats["plan_misses"] == 3               # three topologies
+    assert stats["coalesced"] == 2                 # the two 100-vertex reqs
+    assert stats["dispatches"] == 3
+    # shifting a layout by a constant must not change any metric
+    assert reports[0].edge_crossing == reports[2].edge_crossing
+    assert reports[0].node_occlusion == reports[2].node_occlusion
+
+    # the enhanced fallback still serves (old behavior, eager per request)
+    fallback = ReadabilityServer(method="enhanced", n_strips=N_STRIPS)
+    rep = fallback.evaluate(*small)
+    assert rep.edge_crossing >= 0
+    assert "plan_hits" not in fallback.stats
