@@ -132,6 +132,10 @@ def bench_size(n_v, n_strips, *, batch=True):
                       rng.normal(0, sigma, size=pos.shape).astype(np.float32)
                       for _ in range(BATCH)])
         bplan = plan_readability(b, edges, n_strips=n_strips)
+        # occupancy tiers the batched plan chose (new in the native
+        # batched engine: per-orientation pow2 capacity tiers)
+        rec["strip_tier_caps"] = [list(t[0]) for t in bplan.strip_tiers]
+        rec["strip_tier_counts"] = [list(t[1]) for t in bplan.strip_tiers]
         bj = jnp.asarray(b)
         jax.block_until_ready(evaluate_planned(bplan, bj[0], edges))  # warm
         jax.block_until_ready(evaluate_layouts(bplan, bj, edges))     # warm
@@ -146,14 +150,16 @@ def bench_size(n_v, n_strips, *, batch=True):
         t_loop_unfused = (time.perf_counter() - t0) * (BATCH / k)
 
         # loop of fused single evaluations reusing the plan (the new
-        # fast path, minus batching)
+        # fast path, minus batching).  Both sides fetch their results —
+        # a layout optimizer reads the scores, so the loop pays B
+        # device->host transfers where the batched dispatch pays ONE
+        # (the engine's "all scalars in one transfer" contract).
         def loop_planned():
-            return [jax.block_until_ready(
-                evaluate_planned(bplan, bj[i], edges))
-                for i in range(BATCH)]
+            return [jax.device_get(evaluate_planned(bplan, bj[i], edges))
+                    for i in range(BATCH)]
 
         t_loop_planned, _ = timed(loop_planned, repeats=2)
-        t_batch, _ = timed(lambda: jax.block_until_ready(
+        t_batch, _ = timed(lambda: jax.device_get(
             evaluate_layouts(bplan, bj, edges)), repeats=2)
         rec["batch_size"] = BATCH
         rec["loop_single_seconds"] = t_loop_unfused
@@ -198,6 +204,14 @@ def main():
             r["batched_speedup_vs_single_loop"] >= 3.0
             for r in results["sizes"]
             if "batched_speedup_vs_single_loop" in r),
+        # the native batched engine must beat a Python loop of the
+        # plan-reusing single-layout jit at every size — the vmapped
+        # path recorded 0.73x/0.80x, i.e. batching used to cost wall
+        # clock instead of amortizing it
+        "batched_speedup_vs_planned_loop_ge_1.5x": all(
+            r["batched_speedup_vs_planned_loop"] >= 1.5
+            for r in results["sizes"]
+            if "batched_speedup_vs_planned_loop" in r),
     }
     out = os.path.join(os.path.dirname(__file__), "..", "BENCH_engine.json")
     with open(os.path.abspath(out), "w") as f:

@@ -6,7 +6,7 @@ Fruchterman-Reingold (JAX, blocked O(V^2) repulsion) from several random
 starts, checkpoints each trajectory every few iterations, and scores
 EVERY checkpoint with the fused readability engine in a single batched
 dispatch: one :func:`repro.core.plan_readability` plan for the whole
-candidate population, one ``vmap``-batched
+candidate population, one natively batched
 :func:`repro.core.evaluate_layouts` call, one device->host transfer —
 the plan-once / evaluate-many pattern the engine exists for.
 

@@ -60,7 +60,8 @@ def count_crossings_exact(pos: jax.Array, edges: jax.Array, *,
         shared = ((bv[:, None] == v[None, :]) | (bv[:, None] == u[None, :]) |
                   (bu[:, None] == v[None, :]) | (bu[:, None] == u[None, :]))
         mask = (ii[:, None] < idx[None, :]) & bok[:, None] & ok[None, :] & ~shared
-        return jnp.sum(jnp.where(mask & cross, 1, 0), dtype=jnp.int64)
+        return jnp.sum(jnp.where(mask & cross, 1, 0),
+                       dtype=gridlib.count_dtype())
 
     starts = jnp.arange(0, e_pad, block, dtype=jnp.int32)
     return jnp.sum(lax.map(row_block, starts))

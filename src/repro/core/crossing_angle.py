@@ -20,6 +20,7 @@ from jax import lax
 
 from repro.core import grid as gridlib
 from repro.core.crossing import _pad_to, bucket_reversal_stats
+from repro.core.grid import count_dtype
 from repro.core.geometry import (edge_endpoints, segment_theta,
                                  segments_cross)
 
@@ -63,7 +64,7 @@ def crossing_angle_exact(pos, edges, *, ideal=DEFAULT_IDEAL, block: int = 512,
         d = jnp.abs(bth[:, None] - th[None, :])
         a_c = jnp.minimum(d, jnp.pi - d)
         dev = jnp.abs(ideal - a_c) / ideal
-        return (jnp.sum(jnp.where(mask, 1, 0), dtype=jnp.int64),
+        return (jnp.sum(jnp.where(mask, 1, 0), dtype=count_dtype()),
                 jnp.sum(jnp.where(mask, dev, 0.0)))
 
     starts = jnp.arange(0, e_pad, block, dtype=jnp.int32)

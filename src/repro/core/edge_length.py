@@ -24,3 +24,20 @@ def edge_length_variation(pos, edges, *, edge_valid=None):
     sq = jnp.where(edge_valid, (lengths - l_mu) ** 2, 0.0)
     l_a = jnp.sqrt(jnp.sum(sq) / (n_e * jnp.maximum(l_mu, 1e-30) ** 2))
     return jnp.where(n_e > 1, l_a / jnp.sqrt(jnp.maximum(n_e - 1, 1)), 0.0)
+
+
+def edge_length_variation_batched(pos, edges, *, edge_valid=None):
+    """Batched M_l: ``(B, V, 2)`` layouts of one graph -> ``(B,)``.
+
+    Same formula with the reductions over the trailing edge axis."""
+    d = pos[:, edges[:, 0]] - pos[:, edges[:, 1]]          # (B, E, 2)
+    lengths = jnp.sqrt(jnp.sum(d * d, axis=-1))            # (B, E)
+    if edge_valid is None:
+        edge_valid = jnp.ones(edges.shape[0], dtype=bool)
+    ev = jnp.broadcast_to(edge_valid, lengths.shape)
+    n_e = jnp.maximum(jnp.sum(ev, axis=1), 1)              # (B,)
+    l_mu = jnp.sum(jnp.where(ev, lengths, 0.0), axis=1) / n_e
+    sq = jnp.where(ev, (lengths - l_mu[:, None]) ** 2, 0.0)
+    l_a = jnp.sqrt(jnp.sum(sq, axis=1)
+                   / (n_e * jnp.maximum(l_mu, 1e-30) ** 2))
+    return jnp.where(n_e > 1, l_a / jnp.sqrt(jnp.maximum(n_e - 1, 1)), 0.0)

@@ -39,10 +39,30 @@ This module splits the work:
   ``jnp.where`` on device — no per-orientation host sync — and all scalars
   come back as one device tuple: one transfer instead of five.
 
-* **Batch** (:func:`evaluate_layouts`): ``vmap`` over B candidate layouts
-  of the same graph — one dispatch for a whole population, the entry
-  point for layout-optimization loops (see
-  ``examples/layout_optimization.py``).
+* **Batch** (:func:`evaluate_layouts`): a *natively batched* program over
+  B candidate layouts of the same graph — one dispatch for a whole
+  population, the entry point for layout-optimization loops (see
+  ``examples/layout_optimization.py``).  Not a ``vmap``: vmapped stable
+  argsort/scatter made the batched path *slower* than a Python loop of
+  single-layout jits (0.73x at |V|=1k).  Instead every bucketing step
+  (cell grid and strip buckets) groups the whole batch with ONE
+  composite-key sort and materializes buckets by pure gathers
+  (:func:`repro.core.grid.gather_ragged_buckets` — no scatter at all),
+  and ONE reversal sweep per orientation covers the
+  ``(B * n_strips, cap)`` rows.  Integer metrics are bit-identical to
+  looping the single-layout path.
+
+* **Occupancy tiers**: real layouts are skewed — power-law graphs
+  concentrate segments in few strips — and a flat per-strip capacity
+  makes every strip pay the fullest strip's dense ``cap^2`` pair tile.
+  The plan sorts strips by planned occupancy into <= 3 pow2 capacity
+  tiers (:func:`repro.core.grid.plan_strip_tiers`; tier boundaries are
+  host-side plan data, so shapes stay static) and both the single-layout
+  and batched paths sweep each tier at its own capacity via the ragged
+  one-sort gather bucketing (:func:`repro.core.grid.gather_ragged_buckets`).
+  :func:`fused_reversal_block` stays the single source of truth for the
+  reversal formula; tiering only changes the float summation *order* of
+  the E_ca deviation (counts are exact).
 
 ``use_kernels=True`` routes the per-strip reversal sweep through the
 Pallas TPU kernel (:func:`repro.kernels.ops.strip_reversal_op`) and the
@@ -86,9 +106,11 @@ from jax import lax
 
 from repro.core import grid as gridlib
 from repro.core import crossing_angle as _calib
-from repro.core.edge_length import edge_length_variation
-from repro.core.min_angle import minimum_angle
-from repro.core.occlusion import count_occlusions_gridded
+from repro.core.edge_length import (edge_length_variation,
+                                    edge_length_variation_batched)
+from repro.core.min_angle import minimum_angle, minimum_angle_batched
+from repro.core.occlusion import (count_occlusions_gridded,
+                                  count_occlusions_gridded_batched)
 
 # The five paper metrics (re-exported by repro.core.metrics).
 ALL_METRICS = ("node_occlusion", "minimum_angle", "edge_length_variation",
@@ -132,6 +154,11 @@ class ReadabilityPlan:
     strip_plans: tuple          # ((max_segments, cap), ...) aligned w/ axes
     cell_block: int = 512
     strip_block: int = 256
+    # occupancy tiers per orientation: ((caps, counts, order), ...) with
+    # caps the <=3 pow2 tier capacities (descending), counts the strips
+    # per tier, order the strip ids sorted by (tier, id).  () disables
+    # tiering (one flat tier at the strip_plans cap).
+    strip_tiers: tuple = ()
 
     @property
     def orientation(self) -> str:
@@ -161,7 +188,7 @@ class EngineResult(NamedTuple):
 # ---------------------------------------------------------------------------
 
 def fused_reversal_block(yl, yr, theta, v, u, valid, *, ideal,
-                         with_angle: bool = True):
+                         with_angle: bool = True, reduce: str = "all"):
     """Dense reversal sweep over a ``(B, cap)`` block of strip buckets.
 
     Returns ``(count, deviation_sum)``: the crossing count (order
@@ -171,21 +198,32 @@ def fused_reversal_block(yl, yr, theta, v, u, valid, *, ideal,
     consumer (unfused per-metric paths, the engine, the shard_map
     drivers, and as formula reference the Pallas kernel) goes through
     this function so count and angle can never drift apart.
+
+    ``reduce='all'`` (default) returns scalars; ``reduce='rows'`` returns
+    per-strip ``(B,)`` partial sums — the occupancy-tiered and natively
+    batched sweeps need per-row sums to reassemble per-layout totals.
+    Counts use :func:`repro.core.grid.count_dtype` (explicit int32 unless
+    x64 is enabled; the old ``dtype=jnp.int64`` silently degraded to
+    int32 anyway).
     """
+    axes = (1, 2) if reduce == "rows" else None
     rev = (yl[:, :, None] < yl[:, None, :]) & (yr[:, :, None] > yr[:, None, :])
     shared = ((v[:, :, None] == v[:, None, :]) |
               (v[:, :, None] == u[:, None, :]) |
               (u[:, :, None] == v[:, None, :]) |
               (u[:, :, None] == u[:, None, :]))
     mask = rev & ~shared & valid[:, :, None] & valid[:, None, :]
-    cnt = jnp.sum(jnp.where(mask, 1, 0), dtype=jnp.int64)
+    cnt = jnp.sum(jnp.where(mask, 1, 0), axis=axes,
+                  dtype=gridlib.count_dtype())
     if not with_angle:
-        return cnt, jnp.zeros((), yl.dtype)
+        zero = (jnp.zeros(yl.shape[0], yl.dtype) if reduce == "rows"
+                else jnp.zeros((), yl.dtype))
+        return cnt, zero
     ideal = jnp.asarray(ideal, yl.dtype)
     d = jnp.abs(theta[:, :, None] - theta[:, None, :])
     a_c = jnp.minimum(d, jnp.pi - d)
     dev = jnp.abs(ideal - a_c) / ideal
-    dev_sum = jnp.sum(jnp.where(mask, dev, 0.0))
+    dev_sum = jnp.sum(jnp.where(mask, dev, 0.0), axis=axes)
     return cnt, dev_sum
 
 
@@ -237,19 +275,135 @@ def fused_reversal_stats(buckets: gridlib.SegmentBuckets, *, ideal=1.0,
 
 
 # ---------------------------------------------------------------------------
+# occupancy-tiered sweep (ragged per-strip capacities, shared by the
+# single-layout and natively batched paths)
+# ---------------------------------------------------------------------------
+
+def _reversal_rows(yl, yr, th, v, u, ok, *, ideal, with_angle: bool,
+                   row_block: int):
+    """Blocked per-row reversal sweep: ``(rows, cap)`` buckets ->
+    ``((rows,) count, (rows,) dev_sum)`` via :func:`fused_reversal_block`.
+    """
+    rows, cap = yl.shape
+    row_block = max(1, min(row_block, (1 << 26) // max(cap * cap, 1), rows))
+    n_blocks = -(-rows // row_block)
+    pad = n_blocks * row_block
+
+    def padc(a, fill):
+        extra = pad - rows
+        if extra == 0:
+            return a
+        return jnp.concatenate(
+            [a, jnp.full((extra,) + a.shape[1:], fill, a.dtype)])
+
+    yl, yr, th = padc(yl, 0.0), padc(yr, 0.0), padc(th, 0.0)
+    v, u, ok = padc(v, -1), padc(u, -2), padc(ok, False)
+
+    def block_fn(b0):
+        sl = lambda a: lax.dynamic_slice_in_dim(a, b0, row_block, axis=0)
+        return fused_reversal_block(sl(yl), sl(yr), sl(th), sl(v), sl(u),
+                                    sl(ok), ideal=ideal,
+                                    with_angle=with_angle, reduce="rows")
+
+    starts = jnp.arange(0, pad, row_block, dtype=jnp.int32)
+    counts, devs = lax.map(block_fn, starts)
+    return counts.reshape(pad)[:rows], devs.reshape(pad)[:rows]
+
+
+def _tier_layout(plan: "ReadabilityPlan", axis_i: int):
+    """Host-side ragged bucket layout for one strip orientation.
+
+    Decodes the plan's occupancy tiers into per-strip (offset, capacity)
+    arrays plus per-tier slabs.  Falls back to one flat tier at the
+    orientation's planned cap when the tier data is absent or
+    inconsistent with ``strip_plans`` (e.g. a hand-edited plan that
+    shrank the flat cap — capacity starvation tests rely on the flat cap
+    staying authoritative).  Returns ``(strip_offset, strip_cap, total,
+    slabs)`` with numpy arrays and ``slabs = ((flat_offset, n_strips_t,
+    cap_t), ...)``."""
+    n_strips = plan.n_strips
+    _, cap = plan.strip_plans[axis_i]
+    tiers = (plan.strip_tiers[axis_i]
+             if axis_i < len(plan.strip_tiers) else ())
+    ok = (len(tiers) == 3 and len(tiers[0]) == len(tiers[1])
+          and sum(tiers[1]) == n_strips and len(tiers[2]) == n_strips
+          and sorted(tiers[2]) == list(range(n_strips))
+          and max(tiers[0]) <= cap)
+    caps, counts, order = (tiers if ok else
+                           ((cap,), (n_strips,), tuple(range(n_strips))))
+    order_np = np.asarray(order, np.int64)
+    pos_caps = np.repeat(np.asarray(caps, np.int64),
+                         np.asarray(counts, np.int64))
+    pos_off = np.concatenate([[0], np.cumsum(pos_caps)])[:-1]
+    total = int(pos_caps.sum())
+    strip_cap = np.zeros(n_strips, np.int32)
+    strip_off = np.zeros(n_strips, np.int32)
+    strip_cap[order_np] = pos_caps
+    strip_off[order_np] = pos_off
+    slabs, off = [], 0
+    for c, n in zip(caps, counts):
+        slabs.append((off, int(n), int(c)))
+        off += int(n) * int(c)
+    return strip_off, strip_cap, total, slabs
+
+
+def _tiered_strip_stats(plan: "ReadabilityPlan", axis_i: int, segs, B: int,
+                        *, with_angle: bool):
+    """One-sort gather bucketing + occupancy-tiered reversal sweep.
+
+    ``segs`` is a batched :class:`~repro.core.grid.StripSegments` with
+    ``(B, max_segments)`` fields (``B=1`` for the single-layout path —
+    the batched and looped programs share this code, which is what makes
+    their integer metrics bit-identical).  The whole batch is grouped by
+    ONE composite-key sort and materialized by gathers
+    (:func:`~repro.core.grid.gather_ragged_buckets`; no scatter, no
+    vmap), and each capacity tier is swept at its own ``cap_t^2`` pair
+    tile instead of every strip paying the fullest strip's.  Returns
+    ``((B,) count, (B,) dev_sum, (B,) dropped)``.
+    """
+    n_strips = plan.n_strips
+    strip_off, strip_cap, total, slabs = _tier_layout(plan, axis_i)
+    yl, yr, th, v, u, ok, _, dropped = gridlib.gather_ragged_buckets(
+        segs.strip, n_strips, strip_off, strip_cap,
+        segs.yl, segs.yr, segs.theta, segs.v, segs.u, valid=segs.valid)
+
+    gridlib.CALL_COUNTS["reversal_sweeps"] += 1
+    cnt = jnp.zeros(B, gridlib.count_dtype())
+    dev = jnp.zeros(B, yl.dtype)
+    row_block = min(plan.strip_block, n_strips)
+    for off, n_t, cap_t in slabs:
+        sl = lambda a: (a[:, off:off + n_t * cap_t]
+                        .reshape(B * n_t, cap_t))
+        rc, rd = _reversal_rows(sl(yl), sl(yr), sl(th), sl(v), sl(u),
+                                sl(ok), ideal=plan.ideal,
+                                with_angle=with_angle, row_block=row_block)
+        cnt = cnt + rc.reshape(B, n_t).sum(axis=1)
+        dev = dev + rd.reshape(B, n_t).sum(axis=1)
+    return cnt, dev, dropped
+
+
+# ---------------------------------------------------------------------------
 # planning (host side, once per graph topology/extent)
 # ---------------------------------------------------------------------------
 
 def plan_readability(pos, edges, *, radius: float = 0.5, ideal_angle=None,
                      n_strips: int = 64, orientation: str = "both",
                      metrics=ALL_METRICS, cell_block: int = 512,
-                     strip_block: int = 256) -> ReadabilityPlan:
+                     strip_block: int = 256,
+                     tier_strips: bool = True) -> ReadabilityPlan:
     """Build a :class:`ReadabilityPlan` from concrete data (host side).
 
     ``pos`` may be ``(V, 2)`` or a batch ``(B, V, 2)`` — a batched plan
     sizes every capacity to cover all B layouts, for
     :func:`evaluate_layouts`.  Planning is the only numpy round-trip;
     everything downstream stays on device.
+
+    ``tier_strips=False`` disables the occupancy tiers: every strip gets
+    the flat top cap.  The flat cap's headroom is uniform, so it
+    tolerates layouts whose occupancy *shifts between strips* (drifting
+    same-topology traffic) much longer before overflowing — the serving
+    session plans flat for exactly that reason, trading the tiered
+    sweep's padded-pair savings for a zero-replan steady state.
     """
     pos = np.asarray(pos, np.float32)
     edges = np.asarray(edges, np.int32)
@@ -264,20 +418,27 @@ def plan_readability(pos, edges, *, radius: float = 0.5, ideal_angle=None,
         origin, nx, ny, cell_cap, cell_size = (0.0, 0.0), 1, 1, 8, 1.0
 
     axes = _AXES[orientation]
-    strip_plans = []
+    strip_plans, strip_tiers = [], []
     if ("edge_crossing" in metrics) or ("edge_crossing_angle" in metrics):
         for axis in axes:
-            max_segments, cap = 0, 0
+            max_segments = 0
+            occ = np.zeros(n_strips, np.int64)
             for p in pos_b:
-                ms, c = gridlib.plan_strips(p, edges, n_strips, axis=axis)
-                max_segments, cap = max(max_segments, ms), max(cap, c)
-            strip_plans.append((max_segments, cap))
+                ms, per_strip = gridlib.plan_strip_occupancy(
+                    p, edges, n_strips, axis=axis)
+                max_segments = max(max_segments, ms)
+                occ = np.maximum(occ, per_strip)
+            tiers = gridlib.plan_strip_tiers(occ)
+            # the flat cap IS the top tier's cap, so the tiered layout
+            # never exceeds what strip_plans advertises
+            strip_plans.append((max_segments, tiers[0][0]))
+            strip_tiers.append(tiers if tier_strips else ())
 
     return ReadabilityPlan(
         radius=float(radius), ideal=ideal, n_strips=int(n_strips),
         axes=axes, metrics=metrics, grid_origin=origin, grid_nx=nx,
         grid_ny=ny, cell_cap=cell_cap, grid_cell_size=float(cell_size),
-        strip_plans=tuple(strip_plans),
+        strip_plans=tuple(strip_plans), strip_tiers=tuple(strip_tiers),
         cell_block=int(cell_block), strip_block=int(strip_block))
 
 
@@ -330,18 +491,34 @@ def _evaluate(plan: ReadabilityPlan, pos, edges, use_kernels: bool,
     want_eca = "edge_crossing_angle" in m
     if want_ec or want_eca:
         stats = []
-        for axis, (max_segments, cap) in zip(plan.axes, plan.strip_plans):
+        for axis_i, (axis, (max_segments, cap)) in enumerate(
+                zip(plan.axes, plan.strip_plans)):
             # strip build + bucketing happen ONCE per orientation; the one
             # fused sweep serves both E_c and E_ca
             segs = gridlib.build_strip_segments(
                 pos, edges, plan.n_strips, max_segments, axis=axis,
                 edge_valid=edge_valid)
-            buckets = gridlib.bucketize_segments(segs, plan.n_strips, cap)
-            cnt, dev = fused_reversal_stats(
-                buckets, ideal=plan.ideal,
-                strip_block=min(plan.strip_block, plan.n_strips),
-                with_angle=want_eca, use_kernels=use_kernels)
-            stats.append((cnt, dev, buckets.overflow))
+            if use_kernels:
+                # the Pallas kernel sweeps the flat (n_strips, cap) layout
+                # (it pads cap to lane multiples anyway, so tiering would
+                # buy nothing)
+                buckets = gridlib.bucketize_segments(segs, plan.n_strips,
+                                                     cap)
+                cnt, dev = fused_reversal_stats(
+                    buckets, ideal=plan.ideal,
+                    strip_block=min(plan.strip_block, plan.n_strips),
+                    with_angle=want_eca, use_kernels=True)
+                stats.append((cnt, dev, buckets.overflow))
+            else:
+                # occupancy-tiered sweep, as the B=1 case of the batched
+                # program (shared code keeps looped == batched bit-exact)
+                segs1 = segs._replace(
+                    strip=segs.strip[None], yl=segs.yl[None],
+                    yr=segs.yr[None], theta=segs.theta[None],
+                    v=segs.v[None], u=segs.u[None], valid=segs.valid[None])
+                cnt, dev, drop = _tiered_strip_stats(
+                    plan, axis_i, segs1, 1, with_angle=want_eca)
+                stats.append((cnt[0], dev[0], drop[0] + segs.overflow))
         if len(stats) == 1:
             (ec_count, best_dev, ec_ov) = stats[0]
             best_count = ec_count
@@ -390,11 +567,97 @@ def _evaluate_planned(plan, pos, edges, n_valid_vertices=None,
                      n_valid_vertices, n_valid_edges)
 
 
+def _evaluate_batched(plan: ReadabilityPlan, batch_pos, edges,
+                      n_valid_vertices=None,
+                      n_valid_edges=None) -> EngineResult:
+    """The natively batched engine program: ``(B, V, 2)`` in one pass.
+
+    No per-layout dispatch: each bucketing step groups the whole batch
+    with ONE composite-key sort and materializes buckets by gathers
+    (vmapped argsort/scatter is what made ``evaluate_layouts`` slower
+    than a Python loop), and the occupancy-tiered reversal sweep covers
+    ``(B * n_strips_t, cap_t)`` rows per tier.  Integer metrics are
+    bit-identical to looping
+    :func:`_evaluate` over the batch members (same decompositions, same
+    pair formulas, order-independent integer sums).
+    """
+    global _trace_count
+    if isinstance(batch_pos, jax.core.Tracer):
+        _trace_count += 1
+    pos = jnp.asarray(batch_pos, jnp.float32)
+    edges = jnp.asarray(edges, jnp.int32)
+    B = pos.shape[0]
+    vertex_valid = None
+    if n_valid_vertices is not None:
+        vertex_valid = (jnp.arange(pos.shape[1], dtype=jnp.int32)
+                        < jnp.asarray(n_valid_vertices, jnp.int32))
+    edge_valid = None
+    if n_valid_edges is not None:
+        edge_valid = (jnp.arange(edges.shape[0], dtype=jnp.int32)
+                      < jnp.asarray(n_valid_edges, jnp.int32))
+    m = plan.metrics
+    out = {}
+    overflow = jnp.zeros(B, jnp.int32)
+
+    if "node_occlusion" in m:
+        cnt, ov = count_occlusions_gridded_batched(
+            pos, plan.radius, plan.grid_origin, plan.grid_nx, plan.grid_ny,
+            plan.cell_cap, valid=vertex_valid,
+            cell_block=min(plan.cell_block, plan.grid_nx * plan.grid_ny),
+            cell_size=plan.grid_cell_size)
+        overflow = overflow + ov
+        out["node_occlusion"] = cnt
+    if "minimum_angle" in m:
+        m_a, _ = minimum_angle_batched(pos, edges, edge_valid=edge_valid)
+        out["minimum_angle"] = m_a
+    if "edge_length_variation" in m:
+        out["edge_length_variation"] = edge_length_variation_batched(
+            pos, edges, edge_valid=edge_valid)
+
+    want_ec = "edge_crossing" in m
+    want_eca = "edge_crossing_angle" in m
+    if want_ec or want_eca:
+        stats = []
+        for axis_i, (axis, (max_segments, cap)) in enumerate(
+                zip(plan.axes, plan.strip_plans)):
+            segs = gridlib.build_strip_segments_batched(
+                pos, edges, plan.n_strips, max_segments, axis=axis,
+                edge_valid=edge_valid)
+            cnt, dev, drop = _tiered_strip_stats(
+                plan, axis_i, segs, B, with_angle=want_eca)
+            stats.append((cnt, dev, drop + segs.overflow))
+        if len(stats) == 1:
+            (ec_count, best_dev, ec_ov) = stats[0]
+            best_count = ec_count
+        else:
+            (c0, d0, o0), (c1, d1, o1) = stats
+            ec_count = jnp.maximum(c0, c1)
+            ec_ov = jnp.maximum(o0, o1)
+            take1 = c1 > c0
+            best_count = jnp.where(take1, c1, c0)
+            best_dev = jnp.where(take1, d1, d0)
+        if want_ec:
+            out["edge_crossing"] = ec_count
+        if want_eca:
+            out["edge_crossing_angle"] = jnp.where(
+                best_count > 0,
+                1.0 - best_dev / jnp.maximum(best_count, 1), 1.0)
+            out["crossing_count_for_angle"] = best_count
+        overflow = overflow + ec_ov
+
+    return EngineResult(overflow=overflow, **out)
+
+
 def _evaluate_layouts(plan, batch_pos, edges, n_valid_vertices=None,
                       n_valid_edges=None, use_kernels=False):
-    return jax.vmap(
-        lambda p: _evaluate(plan, p, edges, use_kernels,
-                            n_valid_vertices, n_valid_edges))(batch_pos)
+    if use_kernels:
+        # the Pallas kernels are single-layout tiles; keep the vmapped
+        # dispatch for that (TPU-targeted) route
+        return jax.vmap(
+            lambda p: _evaluate(plan, p, edges, use_kernels,
+                                n_valid_vertices, n_valid_edges))(batch_pos)
+    return _evaluate_batched(plan, batch_pos, edges,
+                             n_valid_vertices, n_valid_edges)
 
 
 evaluate_planned = jax.jit(_evaluate_planned,
@@ -414,7 +677,9 @@ evaluate_layouts = jax.jit(_evaluate_layouts,
                            static_argnames=("plan", "use_kernels"))
 evaluate_layouts.__doc__ = (
     """Batched evaluation: ``(B, V, 2)`` candidate layouts of one graph
-    in a single vmapped dispatch. Returns an :class:`EngineResult` whose
+    in a single natively batched dispatch (one composite-key sort per
+    bucketing step, one tiered reversal sweep per orientation — see the
+    module docstring). Returns an :class:`EngineResult` whose
     fields have a leading batch dimension. Plan with a batched ``pos``
     (or any representative layout) via :func:`plan_readability`.  The
     optional traced ``n_valid_vertices`` / ``n_valid_edges`` scalars
@@ -442,13 +707,28 @@ def replan_on_overflow(plan: ReadabilityPlan, pos, edges, result,
         pos, edges, radius=plan.radius, ideal_angle=plan.ideal,
         n_strips=plan.n_strips, orientation=plan.orientation,
         metrics=plan.metrics, cell_block=plan.cell_block,
-        strip_block=plan.strip_block)
+        strip_block=plan.strip_block,
+        tier_strips=any(plan.strip_tiers))
     cell_cap = max(fresh.cell_cap,
                    gridlib._round_up(int(plan.cell_cap * growth), 8))
-    strip_plans = tuple(
-        (max(f_ms, gridlib._round_up(int(o_ms * growth), 128)),
-         max(f_cap, gridlib._round_up(int(o_cap * growth), 8)))
-        for (f_ms, f_cap), (o_ms, o_cap) in zip(fresh.strip_plans,
-                                                plan.strip_plans))
+    # per-strip growth floors: every strip's tier capacity is floored at
+    # ``growth`` x what the old plan gave it, then re-tiered — the retry
+    # can neither overflow on the offending layout (fresh caps cover it)
+    # nor shrink below what previous traffic needed (no replan ping-pong)
+    strip_plans, strip_tiers = [], []
+    for axis_i, ((f_ms, f_cap), (o_ms, o_cap)) in enumerate(
+            zip(fresh.strip_plans, plan.strip_plans)):
+        _, fresh_cap_s, _, _ = _tier_layout(fresh, axis_i)
+        _, old_cap_s, _, _ = _tier_layout(plan, axis_i)
+        floored = np.maximum(
+            fresh_cap_s.astype(np.int64),
+            np.array([gridlib._next_pow2(int(c * growth))
+                      for c in old_cap_s], np.int64))
+        tiers = gridlib.tiers_from_caps(floored)
+        strip_plans.append(
+            (max(f_ms, gridlib._round_up(int(o_ms * growth), 128)),
+             tiers[0][0]))
+        strip_tiers.append(tiers)
     return dataclasses.replace(fresh, cell_cap=cell_cap,
-                               strip_plans=strip_plans)
+                               strip_plans=tuple(strip_plans),
+                               strip_tiers=tuple(strip_tiers))

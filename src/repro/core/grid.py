@@ -43,6 +43,17 @@ def reset_call_counts():
         CALL_COUNTS[k] = 0
 
 
+def count_dtype():
+    """Integer dtype for pair-count accumulators.
+
+    The old code wrote ``jnp.sum(..., dtype=jnp.int64)`` which silently
+    becomes int32 unless ``jax_enable_x64`` is set — overflow semantics
+    were platform-dependent.  This makes the choice explicit: int32 by
+    default (counts are bounded by the planned ``cap^2 * n_buckets`` pair
+    budget), int64 when the host opted into x64."""
+    return jnp.int64 if jax.config.jax_enable_x64 else jnp.int32
+
+
 class CellBuckets(NamedTuple):
     """Dense capacity-padded buckets of vertices binned into grid cells."""
 
@@ -111,25 +122,117 @@ def scatter_to_buckets(keys: jax.Array, n_buckets: int, cap: int,
         valid = jnp.ones(keys.shape, dtype=bool)
     # Push invalid entries to a trash bucket at index n_buckets.
     keys = jnp.where(valid, keys, n_buckets).astype(jnp.int32)
-    order = jnp.argsort(keys, stable=True)
+    order = jnp.argsort(keys, stable=True).astype(jnp.int32)
     skeys = keys[order]
     ranks = rank_within_group(skeys)
     in_cap = (ranks < cap) & (skeys < n_buckets)
-    # Flat destination; overflowing entries routed to a scratch slot.
+    # ONE scatter routes the *source index* to its slot; the value arrays
+    # follow by gathers (gathers parallelize where scatters serialize).
     dest = jnp.where(in_cap, skeys * cap + ranks, n_buckets * cap)
+    src = jnp.zeros(n_buckets * cap + 1, jnp.int32)
+    src = src.at[dest].set(order, mode="drop")[:-1]
+    vflat = jnp.zeros(n_buckets * cap + 1, dtype=bool)
+    bvalid = vflat.at[dest].set(in_cap, mode="drop")[:-1]
     out_values = []
     for val in values:
-        sval = val[order]
-        flat = jnp.zeros((n_buckets * cap + 1,) + sval.shape[1:], sval.dtype)
-        flat = flat.at[dest].set(sval, mode="drop")
-        out_values.append(flat[:-1].reshape((n_buckets, cap) + sval.shape[1:]))
-    vflat = jnp.zeros(n_buckets * cap + 1, dtype=bool)
-    vflat = vflat.at[dest].set(in_cap, mode="drop")
-    bvalid = vflat[:-1].reshape(n_buckets, cap)
-    counts = jnp.zeros(n_buckets + 1, jnp.int32).at[jnp.minimum(skeys, n_buckets)].add(
-        jnp.where(skeys < n_buckets, 1, 0))[:n_buckets]
+        flat = jnp.where(
+            bvalid.reshape(bvalid.shape + (1,) * (val.ndim - 1)),
+            val[src], jnp.zeros((), val.dtype))
+        out_values.append(flat.reshape((n_buckets, cap) + val.shape[1:]))
+    bvalid = bvalid.reshape(n_buckets, cap)
+    # per-bucket occupancy from the sorted keys (binary search, no
+    # scatter-add)
+    bounds = jnp.searchsorted(skeys, jnp.arange(n_buckets + 1,
+                                                dtype=jnp.int32))
+    counts = (bounds[1:] - bounds[:-1]).astype(jnp.int32)
     overflow = jnp.sum(counts) - jnp.sum(bvalid)
     return (*out_values, bvalid, counts, overflow.astype(jnp.int32))
+
+
+def _sort_groups_batched(keys: jax.Array, n_buckets: int):
+    """Stable group-sort of ``(B, M)`` int keys in ``[0, n_buckets]``
+    (``n_buckets`` = trash), independently per row.
+
+    Fast path: pack ``(key, index)`` into ONE int32 composite and use the
+    single-operand ``jnp.sort`` — XLA CPU sorts a single array ~8x
+    faster than the comparator path that ``argsort``/multi-operand
+    ``lax.sort`` take, and the low bits hand back the source index for
+    free (stability by construction).  Falls back to stable argsort when
+    the composite would not fit 31 bits.  Returns ``(idx, skeys)``, both
+    ``(B, M)``: the source index and the sorted keys."""
+    M = keys.shape[-1]
+    kbits = max(int(n_buckets).bit_length(), 1)
+    mbits = max(int(M - 1).bit_length(), 1)
+    if kbits + mbits <= 31:
+        iota = jnp.arange(M, dtype=jnp.int32)
+        comp = jnp.sort((keys << mbits) | iota, axis=-1)
+        return (comp & ((1 << mbits) - 1)), (comp >> mbits)
+    idx = jnp.argsort(keys, axis=-1, stable=True).astype(jnp.int32)
+    return idx, jnp.take_along_axis(keys, idx, axis=-1)
+
+
+def gather_ragged_buckets(keys: jax.Array, n_buckets: int, bucket_offset,
+                          bucket_cap, *values: jax.Array, valid=None):
+    """Group ``values`` by integer ``keys`` into a *ragged-dense* layout:
+    bucket ``k`` owns the slot range ``[bucket_offset[k],
+    bucket_offset[k] + bucket_cap[k])`` of a ``(total,)`` row buffer.
+
+    This is :func:`scatter_to_buckets` generalized two ways: per-bucket
+    capacities (the occupancy-tiered sweep stores skewed strips at
+    different capacities without paying the fullest strip's padding
+    everywhere) and a native batch axis — ``keys`` and each value are
+    ``(B, M)``, and the whole batch is grouped by ONE sort (where
+    ``vmap`` would emit B comparator sorts and B scatters).  There is no
+    scatter at all: after the composite sort each bucket's content is a
+    *contiguous run* of the sorted row, so slot ``j`` of bucket ``k``
+    is ``sorted[start[k] + j]`` — buckets materialize by pure gathers,
+    which parallelize where scatters serialize.
+
+    ``bucket_offset`` / ``bucket_cap`` are host-side ``(n_buckets,)``
+    integer arrays (plan data; they define one shared slot layout for
+    every batch row).  Elements beyond a bucket's capacity are dropped
+    and counted.  Returns ``(bucketed_values..., valid, counts,
+    overflow)`` with values/valid shaped ``(B, total)``, ``counts``
+    ``(B, n_buckets)`` true occupancy, ``overflow`` ``(B,)``.
+    """
+    import numpy as np
+
+    bucket_offset = np.asarray(bucket_offset, np.int64)
+    bucket_cap = np.asarray(bucket_cap, np.int64)
+    total = int((bucket_offset + bucket_cap).max()) if len(bucket_cap) else 0
+    # host-side slot maps: owning bucket and within-bucket position of
+    # every flat slot.  Buckets tile [0, total) but not necessarily in
+    # bucket-index order (tiered strip layouts permute them), so walk
+    # them in offset order.
+    by_off = np.argsort(bucket_offset)
+    slot_bucket = np.repeat(by_off.astype(np.int32), bucket_cap[by_off])
+    starts = np.repeat(bucket_offset[by_off], bucket_cap[by_off])
+    slot_j = (np.arange(total, dtype=np.int64) - starts).astype(np.int32)
+    slot_bucket = jnp.asarray(slot_bucket)
+    slot_j = jnp.asarray(slot_j)
+
+    B, M = keys.shape
+    if valid is None:
+        valid = jnp.ones(keys.shape, dtype=bool)
+    keys = jnp.where(valid, keys, n_buckets).astype(jnp.int32)
+    idx, skeys = _sort_groups_batched(keys, n_buckets)
+    probe = jnp.arange(n_buckets + 1, dtype=jnp.int32)
+    bounds = jax.vmap(lambda r: jnp.searchsorted(r, probe))(skeys)
+    counts = (bounds[:, 1:] - bounds[:, :-1]).astype(jnp.int32)  # (B, K)
+    routed = bounds[:, n_buckets].astype(jnp.int32)              # (B,)
+
+    start = bounds[:, :-1][:, slot_bucket]                       # (B, total)
+    in_cap = slot_j[None, :] < counts[:, slot_bucket]
+    src_sorted = jnp.minimum(start + slot_j[None, :], M - 1)
+    src = jnp.take_along_axis(idx, src_sorted, axis=1)
+    out_values = []
+    for val in values:
+        out_values.append(jnp.where(
+            in_cap, jnp.take_along_axis(val, src, axis=1),
+            jnp.zeros((), val.dtype)))
+    placed = jnp.sum(in_cap, axis=1, dtype=jnp.int32)
+    overflow = routed - placed
+    return (*out_values, in_cap, counts, overflow)
 
 
 # ---------------------------------------------------------------------------
@@ -255,6 +358,79 @@ def build_strip_segments(pos: jax.Array, edges: jax.Array, n_strips: int,
     )
 
 
+def build_strip_segments_batched(pos: jax.Array, edges: jax.Array,
+                                 n_strips: int, max_segments: int, *,
+                                 axis: int = 0,
+                                 edge_valid=None) -> StripSegments:
+    """Batched :func:`build_strip_segments`: ``(B, V, 2)`` layouts of one
+    graph -> :class:`StripSegments` with ``(B, max_segments)`` fields and
+    ``(B,)`` overflow.
+
+    Mirrors the single-layout function formula-for-formula (same
+    elementwise op sequence, so boundary ordinates round identically and
+    integer crossing counts stay bit-compatible with the looped path);
+    only the indexing machinery grows a leading batch axis.  Strip ids
+    stay *per-layout* (in ``[0, n_strips]``, ``n_strips`` = trash) —
+    :func:`gather_ragged_buckets` consumes the ``(B, max_segments)`` key
+    rows directly, one sorted row per layout.
+    """
+    from repro.core.geometry import segment_theta
+
+    CALL_COUNTS["strip_builds"] += 1
+
+    B = pos.shape[0]
+    p = pos[:, edges[:, 0]]                          # (B, E, 2)
+    q = pos[:, edges[:, 1]]
+    x1, y1 = p[..., axis], p[..., 1 - axis]
+    x2, y2 = q[..., axis], q[..., 1 - axis]
+    theta = segment_theta(p[..., 0], p[..., 1], q[..., 0], q[..., 1])
+    if edge_valid is None:
+        edge_valid = jnp.ones(edges.shape[0], dtype=bool)
+    ev = jnp.broadcast_to(edge_valid, x1.shape)      # one mask, all layouts
+
+    lo = jnp.min(jnp.where(ev, jnp.minimum(x1, x2), jnp.inf),
+                 axis=1, keepdims=True)
+    hi = jnp.max(jnp.where(ev, jnp.maximum(x1, x2), -jnp.inf),
+                 axis=1, keepdims=True)
+    width = jnp.maximum((hi - lo) / n_strips, 1e-30)
+
+    xa = jnp.minimum(x1, x2)
+    xb = jnp.maximum(x1, x2)
+    s_first = jnp.ceil((xa - lo) / width).astype(jnp.int32)
+    s_last = jnp.floor((xb - lo) / width).astype(jnp.int32) - 1
+    s_first = jnp.clip(s_first, 0, n_strips - 1)
+    s_last = jnp.clip(s_last, -1, n_strips - 1)
+    n_seg = jnp.where(ev, jnp.maximum(0, s_last - s_first + 1), 0)
+
+    offsets = jnp.cumsum(n_seg, axis=1)              # (B, E) inclusive
+    total = offsets[:, -1:]                          # (B, 1)
+    starts = offsets - n_seg
+    slot = jnp.arange(max_segments, dtype=jnp.int32)
+    eid = jax.vmap(
+        lambda off: jnp.searchsorted(off, slot, side="right"))(offsets)
+    eid = jnp.minimum(eid.astype(jnp.int32), edges.shape[0] - 1)
+    valid = slot[None, :] < total
+    s_local = slot[None, :] - jnp.take_along_axis(starts, eid, axis=1)
+    strip = jnp.take_along_axis(s_first, eid, axis=1) + s_local
+
+    ga = lambda a: jnp.take_along_axis(a, eid, axis=1)
+    ex1, ey1, ex2, ey2 = ga(x1), ga(y1), ga(x2), ga(y2)
+    dx = ex2 - ex1
+    slope = (ey2 - ey1) / jnp.where(jnp.abs(dx) < 1e-30, 1e-30, dx)
+    bl = lo + strip.astype(pos.dtype) * width
+    br = bl + width
+    yl = ey1 + (bl - ex1) * slope
+    yr = ey1 + (br - ex1) * slope
+
+    return StripSegments(
+        strip=jnp.where(valid, strip, n_strips),
+        yl=yl, yr=yr, theta=ga(theta),
+        v=edges[eid, 0], u=edges[eid, 1],
+        valid=valid,
+        overflow=jnp.maximum(total[:, 0] - max_segments, 0).astype(jnp.int32),
+    )
+
+
 def bucketize_segments(segs: StripSegments, n_strips: int, cap: int) -> SegmentBuckets:
     """Group comparable segments into dense per-strip buckets (the TPU
     analogue of the paper's per-strip groupBy, fig 1 B-3)."""
@@ -318,15 +494,14 @@ def plan_occlusion_grid(pos, radius, pad: int = 8, cap_multiple: int = 8,
     return (float(lo[0]), float(lo[1])), nx, ny, cap, size
 
 
-def plan_strips(pos, edges, n_strips: int, pad: float = 1.25,
-                cap_multiple: int = 8, axis: int = 0):
-    """Pick max_segments and per-strip capacity from concrete data.
+def plan_strip_occupancy(pos, edges, n_strips: int, pad: float = 1.25,
+                         axis: int = 0):
+    """Segment budget + exact per-strip occupancy from concrete data.
 
-    Both the total segment budget and the per-strip capacity carry the
-    ``pad`` headroom factor, so a plan made from one representative
-    layout keeps serving perturbed siblings (batched candidates, drifting
-    optimization iterates, padded serving traffic) without tripping the
-    overflow counter."""
+    Returns ``(max_segments, per_strip)`` where ``per_strip`` is the
+    ``(n_strips,)`` int64 true occupancy (no headroom applied) — the raw
+    material for both the flat capacity (:func:`plan_strips`) and the
+    occupancy tiers (:func:`plan_strip_tiers`)."""
     import numpy as np
 
     pos = np.asarray(pos)
@@ -343,7 +518,6 @@ def plan_strips(pos, edges, n_strips: int, pad: float = 1.25,
     n_seg = np.maximum(0, s_last - s_first + 1)
     total = int(n_seg.sum())
     max_segments = _round_up(max(int(total * pad), 1) + 64, 128)
-    per_strip = np.zeros(n_strips, dtype=np.int64)
     # exact per-strip occupancy via difference array
     first = s_first[n_seg > 0]
     last = s_last[n_seg > 0]
@@ -351,5 +525,74 @@ def plan_strips(pos, edges, n_strips: int, pad: float = 1.25,
     np.add.at(diff, first, 1)
     np.add.at(diff, last + 1, -1)
     per_strip = np.cumsum(diff[:-1])
+    return max_segments, per_strip
+
+
+def plan_strips(pos, edges, n_strips: int, pad: float = 1.25,
+                cap_multiple: int = 8, axis: int = 0):
+    """Pick max_segments and per-strip capacity from concrete data.
+
+    Both the total segment budget and the per-strip capacity carry the
+    ``pad`` headroom factor, so a plan made from one representative
+    layout keeps serving perturbed siblings (batched candidates, drifting
+    optimization iterates, padded serving traffic) without tripping the
+    overflow counter."""
+    max_segments, per_strip = plan_strip_occupancy(pos, edges, n_strips,
+                                                   pad=pad, axis=axis)
     cap = _round_up(int(per_strip.max() * pad) + 8, cap_multiple)
     return max_segments, cap
+
+
+def _next_pow2(n: int, floor: int = 8) -> int:
+    v = int(floor)
+    while v < n:
+        v *= 2
+    return v
+
+
+def tiers_from_caps(cap_per_strip, max_tiers: int = 3,
+                    cap_multiple: int = 8):
+    """Collapse per-strip capacities into <= ``max_tiers`` tiers at pow2
+    boundaries.
+
+    Strips are grouped by the pow2 level covering their need (keeping the
+    ``max_tiers`` largest distinct levels; strips below the smallest kept
+    level join it), but each tier's *capacity* is the rounded max need
+    inside the tier, not the pow2 ceiling — so the top tier's cap equals
+    the old flat cap and the tiered pair work is never larger than the
+    flat sweep's, on uniform inputs included.  Returns ``(caps, counts,
+    order)``: tier capacities descending, strips per tier, and the strip
+    ids sorted by (tier, strip id) — all plain int tuples, hashable plan
+    data."""
+    import numpy as np
+
+    need = np.maximum(np.asarray(cap_per_strip, np.int64), 1)
+    levels = np.array([_next_pow2(int(c)) for c in need], dtype=np.int64)
+    kept = sorted(set(levels.tolist()), reverse=True)[:max_tiers]
+    kept_asc = sorted(kept)
+    level_s = np.array([min(k for k in kept_asc if k >= l) for l in levels],
+                       dtype=np.int64)
+    order = np.argsort(-level_s, kind="stable")
+    caps, counts = [], []
+    for lev in sorted(set(level_s.tolist()), reverse=True):
+        member = level_s == lev
+        caps.append(_round_up(int(need[member].max()), cap_multiple))
+        counts.append(int(member.sum()))
+    return tuple(caps), tuple(counts), tuple(int(i) for i in order)
+
+
+def plan_strip_tiers(per_strip_occupancy, pad: float = 1.25,
+                     pad_add: int = 8, max_tiers: int = 3):
+    """Occupancy tiers from true per-strip occupancy (host side).
+
+    Real layouts are skewed (power-law graphs concentrate segments in few
+    strips); a flat capacity makes every strip pay the fullest strip's
+    ``cap^2`` pair tile.  Each strip's needed capacity carries the same
+    ``pad`` headroom as :func:`plan_strips`, then strips collapse into
+    <= ``max_tiers`` pow2 capacity tiers (static plan data, so shapes
+    stay jit-friendly)."""
+    import numpy as np
+
+    occ = np.asarray(per_strip_occupancy, np.int64)
+    need = np.maximum((occ * pad).astype(np.int64) + pad_add, 8)
+    return tiers_from_caps(need, max_tiers=max_tiers)

@@ -18,6 +18,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.core.grid import count_dtype
+
 _BIG = jnp.float32(3.0e38)
 
 
@@ -29,7 +31,7 @@ def count_inversions_dense(a: jax.Array, valid=None, *, block: int = 1024):
     lt = idx[:, None] < idx[None, :]
     gt = a[:, None] > a[None, :]
     mask = lt & gt & valid[:, None] & valid[None, :]
-    return jnp.sum(jnp.where(mask, 1, 0), dtype=jnp.int64)
+    return jnp.sum(jnp.where(mask, 1, 0), dtype=count_dtype())
 
 
 def count_inversions_merge(a: jax.Array, valid=None):
@@ -54,7 +56,7 @@ def count_inversions_merge(a: jax.Array, valid=None):
     if pad:
         x = jnp.concatenate([x, jnp.full((pad,), _BIG, jnp.float32)])
 
-    total = jnp.zeros((), jnp.int64)
+    total = jnp.zeros((), count_dtype())
     width = 1
     while width < size:
         rows = x.reshape(-1, 2 * width)
@@ -64,7 +66,7 @@ def count_inversions_merge(a: jax.Array, valid=None):
         # #{elements of left strictly greater than b}
         counts = width - jax.vmap(
             lambda l, r: jnp.searchsorted(l, r, side="right"))(left, right)
-        total = total + jnp.sum(counts, dtype=jnp.int64)
+        total = total + jnp.sum(counts, dtype=count_dtype())
         x = jnp.sort(rows, axis=1).reshape(-1)
         width *= 2
     return total

@@ -119,10 +119,14 @@ def evaluate_layout(pos, edges, *, radius: float = 0.5,
     edges = jnp.asarray(edges, jnp.int32)
 
     if method != "exact":
+        # tier_strips=False: this wrapper re-plans per call, so tiered
+        # plans would give every call fresh data-dependent tier shapes
+        # and churn the eager sub-op compile caches; the flat cap keeps
+        # per-call shapes as stable as the pre-tiering path.
         plan = engine.plan_readability(
             pos, edges, radius=radius, ideal_angle=float(ideal_angle),
             n_strips=n_strips, orientation=orientation,
-            metrics=tuple(metrics))
+            metrics=tuple(metrics), tier_strips=False)
         # eager on purpose: the plan is data-derived, so a jitted call
         # would recompile per layout (see module docstring)
         res = engine.evaluate_once(plan, pos, edges,

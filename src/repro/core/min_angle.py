@@ -65,3 +65,81 @@ def minimum_angle(pos: jax.Array, edges: jax.Array, *, n_vertices=None,
     n_counted = jnp.maximum(jnp.sum(counted), 1)
     m_a = 1.0 - jnp.sum(dev) / n_counted
     return m_a, counted
+
+
+def minimum_angle_batched(pos: jax.Array, edges: jax.Array, *,
+                          edge_valid=None):
+    """Batched M_a: ``(B, V, 2)`` layouts of one graph -> ``(B,)``.
+
+    The single-layout path argsorts (vertex, angle) pairs and runs four
+    segment reductions; vmapping that gives B three-operand comparator
+    sorts plus B scattered segment ops.  This exploits what the batch
+    shares: the *vertex keys are layout-invariant*, so the run layout of
+    the sorted array (degrees, run starts) is computed ONCE from the
+    keys, each row needs only a two-operand ``lax.sort`` carrying the
+    angles (no permutation indices), per-vertex min/max angles are the
+    run's first/last element — plain gathers — and the min gap within
+    each run comes from a doubling segmented min (log2(2E) elementwise
+    passes, no scatter).  ``min`` is associative and commutative, so
+    every reduction is bit-identical to the segment-op path.  Returns
+    ``(m_a (B,), counted (B, V))``.
+    """
+    B, V = pos.shape[0], pos.shape[1]
+    E = edges.shape[0]
+    if edge_valid is None:
+        edge_valid = jnp.ones(E, dtype=bool)
+
+    src = jnp.concatenate([edges[:, 0], edges[:, 1]]).astype(jnp.int32)
+    dst = jnp.concatenate([edges[:, 1], edges[:, 0]]).astype(jnp.int32)
+    ok = jnp.concatenate([edge_valid, edge_valid])
+    src = jnp.where(ok, src, V)
+    px, py = pos[..., 0], pos[..., 1]
+    srcc = jnp.clip(src, 0, V - 1)
+    sx = jnp.where(ok, px[:, srcc], 0.0)                   # (B, 2E)
+    sy = jnp.where(ok, py[:, srcc], 0.0)
+    dx_ = jnp.where(ok, px[:, dst], 1.0)
+    dy_ = jnp.where(ok, py[:, dst], 0.0)
+    ang = directed_angle(sx, sy, dx_, dy_)
+
+    n = 2 * E
+    keys = jnp.broadcast_to(src, (B, n))
+    _, a = jax.lax.sort((keys, ang), dimension=1, num_keys=2,
+                        is_stable=False)                   # a: (B, n)
+
+    # batch-invariant run layout from the shared keys
+    s = jnp.sort(src)                                      # (n,)
+    bounds = jnp.searchsorted(s, jnp.arange(V + 1, dtype=jnp.int32))
+    deg = (bounds[1:] - bounds[:-1]).astype(jnp.int32)     # (V,)
+    start = bounds[:V].astype(jnp.int32)
+
+    first = jnp.clip(start, 0, n - 1)
+    last = jnp.clip(start + deg - 1, 0, n - 1)
+    amin = a[:, first]                                     # (B, V)
+    amax = a[:, last]
+
+    # min gap within each run: doubling segmented min over the adjacent
+    # differences (gap i is in-run iff s[i+1] == s[i]; cross-run and
+    # trash gaps start at +inf and never contaminate thanks to the
+    # s[i + 2^k] == s[i] guard)
+    same = s[1:] == s[:-1]
+    m = jnp.where(same, a[:, 1:] - a[:, :-1], jnp.inf)     # (B, n-1)
+    L = n - 1
+    shift = 1
+    while shift < L:
+        reach = s[shift:L] == s[:L - shift]
+        m = m.at[:, :L - shift].set(
+            jnp.where(reach, jnp.minimum(m[:, :L - shift], m[:, shift:]),
+                      m[:, :L - shift]))
+        shift *= 2
+    gap_min = jnp.where(deg >= 2, m[:, jnp.clip(first, 0, L - 1)], jnp.inf)
+
+    wrap = TWO_PI - (amax - amin)
+    phi_min = jnp.minimum(gap_min, wrap)
+
+    counted = deg >= 1                                     # (V,) — the
+    # vertex keys (hence degrees) are shared by every layout in the batch
+    ideal = TWO_PI / jnp.maximum(deg, 1)
+    dev = jnp.where(counted, (ideal - phi_min) / ideal, 0.0)
+    n_counted = jnp.maximum(jnp.sum(counted), 1)
+    m_a = 1.0 - jnp.sum(dev, axis=1) / n_counted
+    return m_a, jnp.broadcast_to(counted, (B, V))

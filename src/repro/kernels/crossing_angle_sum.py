@@ -17,6 +17,7 @@ import jax.numpy as jnp
 from jax import lax
 from jax.experimental import pallas as pl
 
+from repro.core.grid import count_dtype
 from repro.kernels.segment_crossing import _cross_tile
 
 TILE_I = 256
@@ -69,4 +70,4 @@ def crossing_angle_stats(x1, y1, x2, y2, theta, v, u, valid, *, ideal: float,
         interpret=interpret,
     )(x1, y1, x2, y2, theta, v, u, valid,
       x1, y1, x2, y2, theta, v, u, valid)
-    return jnp.sum(counts, dtype=jnp.int64), jnp.sum(devs)
+    return jnp.sum(counts, dtype=count_dtype()), jnp.sum(devs)

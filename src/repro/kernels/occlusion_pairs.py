@@ -21,6 +21,8 @@ import jax.numpy as jnp
 from jax import lax
 from jax.experimental import pallas as pl
 
+from repro.core.grid import count_dtype
+
 TILE_I = 512
 TILE_J = 512
 
@@ -74,4 +76,4 @@ def occlusion_count(x: jax.Array, y: jax.Array, valid: jax.Array, *,
         out_shape=jax.ShapeDtypeStruct(grid, jnp.int32),
         interpret=interpret,
     )(x, y, valid, x, y, valid)
-    return jnp.sum(partial_counts, dtype=jnp.int64)
+    return jnp.sum(partial_counts, dtype=count_dtype())

@@ -13,6 +13,7 @@ from __future__ import annotations
 import jax.numpy as jnp
 
 from repro.core.geometry import segment_theta, segments_cross
+from repro.core.grid import count_dtype
 
 
 def occlusion_count_ref(x, y, radius, valid=None):
@@ -23,7 +24,7 @@ def occlusion_count_ref(x, y, radius, valid=None):
     d2 = (x[:, None] - x[None, :]) ** 2 + (y[:, None] - y[None, :]) ** 2
     tri = jnp.arange(n)[:, None] < jnp.arange(n)[None, :]
     mask = tri & valid[:, None] & valid[None, :]
-    return jnp.sum(mask & (d2 < (2.0 * radius) ** 2), dtype=jnp.int64)
+    return jnp.sum(mask & (d2 < (2.0 * radius) ** 2), dtype=count_dtype())
 
 
 def crossing_count_ref(x1, y1, x2, y2, v, u, valid=None):
@@ -37,7 +38,7 @@ def crossing_count_ref(x1, y1, x2, y2, v, u, valid=None):
               (u[:, None] == v[None, :]) | (u[:, None] == u[None, :]))
     tri = jnp.arange(n)[:, None] < jnp.arange(n)[None, :]
     mask = tri & valid[:, None] & valid[None, :] & ~shared
-    return jnp.sum(mask & cross, dtype=jnp.int64)
+    return jnp.sum(mask & cross, dtype=count_dtype())
 
 
 def crossing_angle_ref(x1, y1, x2, y2, v, u, ideal, valid=None):
@@ -55,7 +56,8 @@ def crossing_angle_ref(x1, y1, x2, y2, v, u, ideal, valid=None):
     d = jnp.abs(th[:, None] - th[None, :])
     a_c = jnp.minimum(d, jnp.pi - d)
     dev = jnp.abs(ideal - a_c) / ideal
-    return (jnp.sum(mask, dtype=jnp.int64), jnp.sum(jnp.where(mask, dev, 0.0)))
+    return (jnp.sum(mask, dtype=count_dtype()),
+            jnp.sum(jnp.where(mask, dev, 0.0)))
 
 
 def reversal_count_ref(yl, yr, v, u, valid=None):
@@ -68,4 +70,4 @@ def reversal_count_ref(yl, yr, v, u, valid=None):
     shared = ((v[:, None] == v[None, :]) | (v[:, None] == u[None, :]) |
               (u[:, None] == v[None, :]) | (u[:, None] == u[None, :]))
     mask = rev & ~shared & valid[:, None] & valid[None, :]
-    return jnp.sum(mask, dtype=jnp.int64)
+    return jnp.sum(mask, dtype=count_dtype())

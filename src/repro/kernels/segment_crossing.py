@@ -18,6 +18,8 @@ import jax.numpy as jnp
 from jax import lax
 from jax.experimental import pallas as pl
 
+from repro.core.grid import count_dtype
+
 TILE_I = 256
 TILE_J = 256
 
@@ -69,4 +71,4 @@ def crossing_count(x1, y1, x2, y2, v, u, valid, *, tile_i: int = TILE_I,
         out_shape=jax.ShapeDtypeStruct(grid, jnp.int32),
         interpret=interpret,
     )(x1, y1, x2, y2, v, u, valid, x1, y1, x2, y2, v, u, valid)
-    return jnp.sum(partial_counts, dtype=jnp.int64)
+    return jnp.sum(partial_counts, dtype=count_dtype())

@@ -19,6 +19,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.core.grid import count_dtype
+
 
 def _reversal_kernel(yl_ref, yr_ref, th_ref, v_ref, u_ref, ok_ref,
                      count_ref, dev_ref, *, ideal: float, with_angle: bool):
@@ -69,4 +71,4 @@ def strip_reversal_stats(yl, yr, theta, v, u, valid, *, ideal: float = 1.0,
                    jax.ShapeDtypeStruct((n_strips, 1), jnp.float32)),
         interpret=interpret,
     )(yl, yr, theta, v, u, valid)
-    return jnp.sum(counts, dtype=jnp.int64), jnp.sum(devs)
+    return jnp.sum(counts, dtype=count_dtype()), jnp.sum(devs)

@@ -12,6 +12,10 @@ of fused engine dispatches:
               -> :class:`~repro.core.engine.ReadabilityPlan`]
           --> coalesce same-key requests into ``(B, V_pad, 2)`` batches
               --> ONE :func:`~repro.core.engine.evaluate_layouts` dispatch
+              (natively batched: one composite-key sort per bucketing
+              step and one occupancy-tiered sweep per orientation serve
+              the whole coalesced batch — coalescing is now strictly
+              cheaper than dispatching requests one by one)
           --> :class:`~repro.core.metrics.ReadabilityReport` per request
               (one device->host transfer per dispatch)
 
@@ -172,10 +176,19 @@ class EvalSession:
         plan = self.plans.get(key)
         if plan is not None:
             return plan
+        # tier_strips=False: serving plans use the flat strip capacity.
+        # A cached plan serves a *stream* of same-topology layouts whose
+        # occupancy drifts between strips; the flat cap's uniform
+        # headroom absorbs that drift where tight per-strip tiers would
+        # trip overflow -> replan -> retrace mid-steady-state.  The
+        # zero-replan/zero-retrace counters are the serving contract;
+        # the tiered sweep stays on for the layout-optimization batch
+        # path, which plans from the whole candidate batch at once.
         plan = engine.plan_readability(
             member["pos"], member["edges"], radius=self.radius,
             ideal_angle=self.ideal, n_strips=self.n_strips,
-            orientation=self.orientation, metrics=self.metrics)
+            orientation=self.orientation, metrics=self.metrics,
+            tier_strips=False)
         self.plans.put(key, plan)
         return plan
 

@@ -122,10 +122,15 @@ def test_engine_bitwise_matches_unfused(graph, orientation):
     assert int(res.edge_crossing) == want["edge_crossing"]
     assert int(res.crossing_count_for_angle) == want["crossing_count_for_angle"]
     assert int(res.overflow) == want["overflow"]
-    # float metrics: bit-identical, not merely close
+    # float metrics: bit-identical, not merely close...
     assert float(res.minimum_angle) == want["minimum_angle"]
     assert float(res.edge_length_variation) == want["edge_length_variation"]
-    assert float(res.edge_crossing_angle) == want["edge_crossing_angle"]
+    # ...except E_ca: the occupancy-tiered sweep sums the deviation over
+    # strips in tier order (fullest strips first) where the flat
+    # reference sums in natural strip order — same pairs, same per-pair
+    # terms, float sum order differs by design.  Counts stay exact.
+    np.testing.assert_allclose(float(res.edge_crossing_angle),
+                               want["edge_crossing_angle"], rtol=1e-6)
     # enhanced occlusion is exact (paper Table 3: 0% error)
     assert int(res.node_occlusion) == int(count_occlusions_exact(pos, RADIUS))
 
@@ -148,7 +153,9 @@ def test_evaluate_layout_wrapper_matches_old_eager_path(graph):
     assert rep.minimum_angle == float(m_a)
     assert rep.edge_length_variation == float(m_l)
     assert rep.edge_crossing == int(e_c)
-    assert rep.edge_crossing_angle == float(e_ca)
+    # tiered sweep: E_ca deviation summed in tier order, not strip order
+    np.testing.assert_allclose(rep.edge_crossing_angle, float(e_ca),
+                               rtol=1e-6)
     assert rep.crossing_count_for_angle == int(cnt)
     # shared strip decomposition: dropped segments count once
     assert rep.overflow == int(occ_ov) + int(ec_ov)
@@ -166,8 +173,12 @@ def test_batched_matches_looped(graph):
         want = evaluate_planned(plan, batch[i], edges)
         assert int(got.node_occlusion[i]) == int(want.node_occlusion)
         assert int(got.edge_crossing[i]) == int(want.edge_crossing)
-        assert float(got.edge_crossing_angle[i]) == \
-            float(want.edge_crossing_angle)
+        # the natively batched sweep blocks (B * n_strips_t) rows where
+        # the B=1 path blocks n_strips_t — same per-pair terms, float
+        # reduction shape differs; integer metrics are exact above
+        np.testing.assert_allclose(float(got.edge_crossing_angle[i]),
+                                   float(want.edge_crossing_angle),
+                                   rtol=1e-6)
         assert float(got.minimum_angle[i]) == float(want.minimum_angle)
         assert float(got.edge_length_variation[i]) == \
             float(want.edge_length_variation)

@@ -77,19 +77,40 @@ def test_sp_and_moe_hints_noop_on_single_device():
     np.testing.assert_allclose(float(base), float(hinted), rtol=1e-6)
 
 
-@pytest.mark.xfail(reason="pre-existing (seed never ran this: module used "
-                   "to error at collection on missing hypothesis): scan vs "
-                   "unrolled layers diverge ~1e-3, needs its own fix",
-                   strict=False)
 def test_scan_layers_off_matches_scan():
+    """scan_layers=False must be the same *math* as the scan path.
+
+    Root cause of the historical ~1.3e-3 divergence (this test used to be
+    xfail'd): it is bf16 intermediate rounding at different XLA fusion
+    boundaries, not an algorithmic difference.  ``lax.scan`` compiles its
+    body as one XLA computation whose fused elementwise chains keep f32
+    intermediates, while the unrolled Python loop materializes (rounds)
+    every primitive's bf16 output; under jit the unrolled graph still
+    fuses across layers where the scan body cannot.  Measured on this
+    container: fp32 scan-vs-unrolled is bit-identical (diff exactly 0.0,
+    eager and jit), bf16 diverges 1.3e-3 eager / 6e-4 jit, and
+    ``remat`` on/off does not change the result.
+
+    So the contract is split: fp32 asserts *exact* equality (the variants
+    are op-for-op the same program), bf16 asserts a tolerance sized to a
+    couple of bf16-rounding accumulation steps (ulp(6.0) in bf16 is
+    ~3e-2; 4e-3 relative is well under one output ulp and ~3x the
+    observed divergence).
+    """
     from repro.configs import get_arch
     from repro.models import transformer as tflib
     cfg = get_arch("qwen3-4b").smoke_config.with_mesh(1)
     params = tflib.init_params(cfg, jax.random.PRNGKey(0))
     batch = {"tokens": jnp.ones((2, 16), jnp.int32),
              "labels": jnp.ones((2, 16), jnp.int32)}
+
+    cfg32 = dataclasses.replace(cfg, dtype=jnp.float32)
+    a32, _ = tflib.loss_fn(params, batch, cfg32)
+    b32, _ = tflib.loss_fn(params, batch,
+                           dataclasses.replace(cfg32, scan_layers=False))
+    assert float(a32) == float(b32)
+
     a, _ = tflib.loss_fn(params, batch, cfg)
     b, _ = tflib.loss_fn(params, batch,
                          dataclasses.replace(cfg, scan_layers=False))
-    # scan vs unrolled differ only in bf16 accumulation order
-    np.testing.assert_allclose(float(a), float(b), rtol=1e-3)
+    np.testing.assert_allclose(float(a), float(b), rtol=4e-3)
