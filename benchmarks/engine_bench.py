@@ -12,7 +12,19 @@ Times, at |V| in {1k, 10k} (CPU-friendly sizes; same code path on TPU):
     per metric: what a caller wrote before this PR) and the plan-reusing
     fused single-layout loop (isolates the pure batching win; on a
     2-core CPU host the workload is compute-bound so this one is modest
-    — the dispatch amortization shows on accelerators).
+    — the dispatch amortization shows on accelerators);
+  * **metric subsets** (|V|=1k): the same ``EvalConfig``-driven program
+    with ``metrics`` pruned to ``crossing_only`` / ``occlusion_only``
+    vs ``all`` — pruning is certified structurally (the crossing-only
+    trace builds ZERO cell buckets and runs zero vertex-key sorts; the
+    occlusion-only trace runs ZERO strip builds/reversal sweeps, via
+    grid.CALL_COUNTS) and timed (each subset must beat the all-metrics
+    program).
+
+``--config '{"n_strips": 128, ...}'`` overrides the base EvalConfig.
+``--smoke`` runs only the subset-pruning section (no file write; exits
+nonzero if a pruned decomposition was built) — CI uses it so
+metric-subset pruning regressions fail fast.
 
 Writes BENCH_engine.json next to this file (the perf trajectory record).
 
@@ -21,6 +33,8 @@ Writes BENCH_engine.json next to this file (the perf trajectory record).
 
 from __future__ import annotations
 
+import argparse
+import dataclasses
 import json
 import os
 import sys
@@ -35,13 +49,22 @@ from common import timed  # noqa: E402
 
 from repro.core import (evaluate_layouts, evaluate_planned,  # noqa: E402
                         plan_readability)
+from repro.core import engine  # noqa: E402
 from repro.core import grid as gridlib  # noqa: E402
 from repro.core.crossing import count_crossings_enhanced  # noqa: E402
 from repro.core.crossing_angle import crossing_angle_enhanced  # noqa: E402
 from repro.core.edge_length import edge_length_variation  # noqa: E402
+from repro.core.keys import EvalConfig  # noqa: E402
 from repro.core.min_angle import minimum_angle  # noqa: E402
 from repro.core.occlusion import count_occlusions_enhanced  # noqa: E402
 BATCH = 32
+
+# metric subsets benched against the all-metrics program
+SUBSETS = {
+    "all": None,                                   # base config's metrics
+    "crossing_only": ("edge_crossing", "edge_crossing_angle"),
+    "occlusion_only": ("node_occlusion",),
+}
 
 
 def make_graph(n_v, seed=0, frac_long=0.02):
@@ -171,7 +194,85 @@ def bench_size(n_v, n_strips, *, batch=True):
     return rec
 
 
-def main():
+def bench_metric_subsets(base: EvalConfig, n_v: int = 1000,
+                         repeats: int = 5):
+    """Per-subset timings + structural pruning proof at one size.
+
+    Counters come from ONE eager ``evaluate_once`` call per subset
+    (deterministic python side effects, immune to jit-cache state);
+    timings come from the jitted ``evaluate_planned`` steady state."""
+    pos, edges = make_graph(n_v)
+    rec = {"n_vertices": n_v, "n_strips": base.n_strips,
+           "config_digest": base.digest(), "subsets": {}}
+    for name, metrics in SUBSETS.items():
+        cfg = base if metrics is None else dataclasses.replace(
+            base, metrics=metrics)
+        plan = plan_readability(pos, edges, **cfg.plan_kwargs())
+        gridlib.reset_call_counts()
+        engine.evaluate_once(plan, pos, edges)
+        counters = dict(gridlib.CALL_COUNTS)
+        jax.block_until_ready(evaluate_planned(plan, pos, edges))  # warm
+        t, _ = timed(lambda: jax.device_get(
+            evaluate_planned(plan, pos, edges)), repeats=repeats)
+        rec["subsets"][name] = {"metrics": list(cfg.metrics), "seconds": t,
+                                "work_counters": counters}
+    t_all = rec["subsets"]["all"]["seconds"]
+    for name in ("crossing_only", "occlusion_only"):
+        rec["subsets"][name]["speedup_vs_all"] = \
+            t_all / rec["subsets"][name]["seconds"]
+    cx = rec["subsets"]["crossing_only"]["work_counters"]
+    oc = rec["subsets"]["occlusion_only"]["work_counters"]
+    rec["pruning"] = {
+        # the acceptance criterion: crossing-only builds ZERO cell
+        # buckets (and skips the vertex-key sort), occlusion-only runs
+        # ZERO reversal sweeps (and builds no strips)
+        "crossing_only_zero_cell_builds":
+            cx["cell_builds"] == 0 and cx["vertex_sorts"] == 0,
+        "occlusion_only_zero_sweeps":
+            oc["reversal_sweeps"] == 0 and oc["strip_builds"] == 0,
+        "crossing_only_faster_than_all":
+            rec["subsets"]["crossing_only"]["speedup_vs_all"] > 1.0,
+        "occlusion_only_faster_than_all":
+            rec["subsets"]["occlusion_only"]["speedup_vs_all"] > 1.0,
+    }
+    return rec
+
+
+def print_subsets(rec):
+    for name, sub in rec["subsets"].items():
+        extra = (f"  speedup vs all {sub['speedup_vs_all']:.2f}x"
+                 if "speedup_vs_all" in sub else "")
+        print(f"  {name:14s}: {sub['seconds'] * 1e3:8.1f} ms  "
+              f"counters {sub['work_counters']}{extra}")
+    print(f"  pruning: {rec['pruning']}")
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--config", default="{}",
+                    help="JSON EvalConfig field overrides, e.g. "
+                         '\'{"n_strips": 128}\'')
+    ap.add_argument("--smoke", action="store_true",
+                    help="subset-pruning section only; no BENCH file; "
+                         "nonzero exit if pruning regressed (CI gate)")
+    args = ap.parse_args(argv)
+    base = EvalConfig(**{"n_strips": 128, **json.loads(args.config)})
+
+    if args.smoke:
+        print("metric subsets (smoke) ...", flush=True)
+        rec = bench_metric_subsets(base, n_v=1000, repeats=3)
+        print_subsets(rec)
+        # timing gates are advisory in smoke (shared CI runners are
+        # noisy); the structural counter gates are the regression tripwire
+        ok = (rec["pruning"]["crossing_only_zero_cell_builds"]
+              and rec["pruning"]["occlusion_only_zero_sweeps"])
+        if not ok:
+            print("SMOKE FAIL: a pruned config still built the "
+                  "decomposition it should skip")
+            sys.exit(1)
+        print("smoke ok: metric-subset pruning intact")
+        return
+
     results = {"backend": jax.default_backend(),
                "sizes": []}
     for n_v, n_strips in ((1000, 128), (10000, 256)):
@@ -191,6 +292,11 @@ def main():
               f"{rec['batched_speedup_vs_single_loop']:.2f}x / "
               f"{rec['batched_speedup_vs_planned_loop']:.2f}x")
 
+    print("metric subsets @1k ...", flush=True)
+    subsets = bench_metric_subsets(base, n_v=1000)
+    results["metric_subsets"] = subsets
+    print_subsets(subsets)
+
     ok_shape = all(r["fused_strip_builds"] == 2
                    and r["fused_reversal_sweeps"] == 2
                    and r["unfused_strip_builds"] == 4
@@ -198,6 +304,7 @@ def main():
                    for r in results["sizes"])
     big = results["sizes"][-1]
     results["acceptance"] = {
+        **subsets["pruning"],
         "fused_work_shape_2_builds_2_sweeps": ok_shape,
         "single_speedup_10k_ge_1.5x": big["single_speedup"] >= 1.5,
         "batched_speedup_ge_3x": all(

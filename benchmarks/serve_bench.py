@@ -1,16 +1,23 @@
 """Serving benchmark: eager per-request server vs the session server.
 
-Compares, on steady-state mixed-size request streams at |V| in
-{200, 1k, 5k} (layout-local graphs, modest per-request perturbations —
-the 'score candidate layouts inside a generation loop' regime):
+Both servers are built from the SAME :class:`repro.core.keys.EvalConfig`
+(only the ``backend`` differs), so what is measured is purely the
+serving architecture.  Compares, on steady-state mixed-size request
+streams at |V| in {200, 1k, 5k} (layout-local graphs, modest per-request
+perturbations — the 'score candidate layouts inside a generation loop'
+regime):
 
-  * the OLD eager path (``method="enhanced"``): host-side re-planning +
+  * the eager baseline (``backend="eager"``): host-side re-planning +
     eager fused evaluation per request — what every request paid before
     the session layer existed;
-  * the session server (``method="session"``): plan-cache + pow2 shape
+  * the session server (``backend="fused"``): plan-cache + pow2 shape
     buckets + padded jitted evaluation + same-bucket coalescing.  After a
     warmup pass the stats counters must show ZERO replans and ZERO new
     traces — steady state is pure jit-cache-hit dispatching.
+
+``--config '{"metrics": ["edge_crossing"], ...}'`` overrides the base
+config, so subset serving (e.g. a crossing-only scoring service) is one
+flag away.
 
 Writes BENCH_serve.json next to the repo root (the serving perf record).
 
@@ -19,6 +26,8 @@ Writes BENCH_serve.json next to the repo root (the serving perf record).
 
 from __future__ import annotations
 
+import argparse
+import dataclasses
 import json
 import os
 import sys
@@ -30,6 +39,7 @@ import numpy as np
 sys.path.insert(0, os.path.dirname(__file__))
 from engine_bench import make_graph  # noqa: E402
 
+from repro.core.keys import EvalConfig  # noqa: E402
 from repro.launch.serve import ReadabilityServer  # noqa: E402
 
 SIZES = (200, 1000, 5000)
@@ -55,16 +65,28 @@ def p50_ms(fn, reps):
     return float(np.median(times)) * 1e3
 
 
-def main():
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--config", default="{}",
+                    help="JSON EvalConfig field overrides, e.g. "
+                         '\'{"metrics": ["edge_crossing"]}\'')
+    args = ap.parse_args(argv)
+    overrides = json.loads(args.config)
+    if "metrics" in overrides:
+        overrides["metrics"] = tuple(overrides["metrics"])
+    base = EvalConfig(**{"n_strips": N_STRIPS, **overrides})
+
     graphs = {n: make_graph(n) for n in SIZES}
     graphs = {n: (np.asarray(p), np.asarray(e)) for n, (p, e) in
               graphs.items()}
     rng = np.random.default_rng(0)
-    results = {"backend": jax.default_backend(), "n_strips": N_STRIPS,
+    results = {"backend": jax.default_backend(), "n_strips": base.n_strips,
+               "config": {"digest": base.digest(),
+                          "metrics": list(base.metrics)},
                "sizes": [], "stream": {}}
 
-    eager = ReadabilityServer(method="enhanced", n_strips=N_STRIPS)
-    sess = ReadabilityServer(method="session", n_strips=N_STRIPS)
+    eager = ReadabilityServer(dataclasses.replace(base, backend="eager"))
+    sess = ReadabilityServer(base)
 
     def mixed_round(server):
         reqs = [(perturbed(graphs[n][0], rng, n), graphs[n][1])

@@ -5,10 +5,11 @@ their readability cheaply enough to steer the process. This driver runs
 Fruchterman-Reingold (JAX, blocked O(V^2) repulsion) from several random
 starts, checkpoints each trajectory every few iterations, and scores
 EVERY checkpoint with the fused readability engine in a single batched
-dispatch: one :func:`repro.core.plan_readability` plan for the whole
-candidate population, one natively batched
-:func:`repro.core.evaluate_layouts` call, one device->host transfer —
-the plan-once / evaluate-many pattern the engine exists for.
+dispatch through the front door: one :class:`repro.api.EvalConfig`, one
+:meth:`repro.api.Evaluator.plan` for the whole candidate population, one
+natively batched :meth:`repro.api.Evaluator.evaluate_batch` call, one
+device->host transfer — the plan-once / evaluate-many pattern the
+engine exists for.
 
   PYTHONPATH=src python examples/layout_optimization.py --n 400 --iters 200
 """
@@ -19,7 +20,7 @@ import time
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import evaluate_layouts, plan_readability, reports_from_batch
+from repro.api import EvalConfig, Evaluator
 from repro.graphs.datasets import random_edges
 from repro.graphs.layouts import fruchterman_reingold, random_layout
 
@@ -60,10 +61,11 @@ def main():
     t_opt = time.time() - t0
 
     # plan once over the whole candidate batch, evaluate in one dispatch
-    batch = jnp.asarray(np.stack(candidates).astype(np.float32))
+    batch = np.stack(candidates).astype(np.float32)
     t0 = time.time()
-    plan = plan_readability(batch, edges, n_strips=args.n_strips)
-    reports = reports_from_batch(evaluate_layouts(plan, batch, edges_j))
+    evaluator = Evaluator(EvalConfig(n_strips=args.n_strips))
+    plan = evaluator.plan(batch, edges)
+    reports = evaluator.evaluate_batch(batch, edges, plan=plan).unbatch()
     t_eval = time.time() - t0
 
     best = (None, -np.inf, None)

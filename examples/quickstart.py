@@ -1,11 +1,12 @@
-"""Quickstart: evaluate the readability of a graph layout.
+"""Quickstart: evaluate the readability of a graph layout through the
+one front door — a frozen :class:`repro.api.EvalConfig` drives every
+path (exact reference, fused engine, metric subsets), and every path
+returns the same typed :class:`repro.api.ReadabilityScores`.
 
   PYTHONPATH=src python examples/quickstart.py
 """
 
-import jax.numpy as jnp
-
-from repro.core import evaluate_layout
+from repro.api import EvalConfig, Evaluator, evaluate_exact
 from repro.graphs.datasets import random_edges
 from repro.graphs.layouts import random_layout
 
@@ -14,16 +15,33 @@ n_vertices, n_edges = 500, 1200
 edges = random_edges(n_vertices, n_edges, seed=0)
 pos = random_layout(n_vertices, seed=0)
 
-# exact algorithms (paper S3.1): all-pairs sweeps
-exact = evaluate_layout(pos, edges, method="exact")
+config = EvalConfig(n_strips=512)
+
+# exact algorithms (paper S3.1): all-pairs sweeps — the reference
+exact = evaluate_exact(pos, edges, config=config)
 print("exact    :", exact.asdict())
 
-# enhanced algorithms (paper S3.2): grid / strip decomposition
-enhanced = evaluate_layout(pos, edges, method="enhanced", n_strips=512)
+# enhanced algorithms (paper S3.2) via the fused engine: the Evaluator
+# plan-caches per topology, so repeated calls never re-plan or re-trace
+enhanced = Evaluator(config).evaluate(pos, edges)
 print("enhanced :", enhanced.asdict())
+print("normalized [0,1] view:",
+      {k: round(v, 4) for k, v in enhanced.normalized().asdict().items()
+       if isinstance(v, float)})
 
 assert exact.node_occlusion == enhanced.node_occlusion  # 0% error (Table 3)
 err = abs(exact.edge_crossing - enhanced.edge_crossing) \
     / max(exact.edge_crossing, 1)
 print(f"edge-crossing approximation error: {100 * err:.2f}% "
       f"(paper Table 3: ~1.5%)")
+
+# metric subsets are pruned at trace level: a crossing-only config plans
+# no occlusion grid and its program builds zero cell buckets — consumers
+# that want one metric pay for one metric (see BENCH_engine.json)
+crossing_only = Evaluator(EvalConfig(n_strips=512,
+                                     metrics=("edge_crossing",)))
+fast = crossing_only.evaluate(pos, edges)
+assert fast.edge_crossing == enhanced.edge_crossing
+assert fast.node_occlusion is None
+print(f"crossing-only config: E_c={fast.edge_crossing} "
+      f"(same count, smaller traced program)")

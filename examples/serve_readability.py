@@ -1,11 +1,18 @@
 """Serve batched readability-evaluation requests (the paper's system as a
-service): plan-cached, shape-bucketed, request-coalescing session server
-by default; round 2 of the stream is the steady state (zero replans, zero
-retraces — see the printed stats).
+service): one EvalConfig drives the plan-cached, shape-bucketed,
+request-coalescing session server; round 2 of the stream is the steady
+state (zero replans, zero retraces — see the printed stats).
 
   PYTHONPATH=src python examples/serve_readability.py
+
+Try a metric-subset service (crossing-only scoring, smaller traced
+programs): pass ``--metrics edge_crossing,edge_crossing_angle``.
 """
+
+import sys
 
 from repro.launch.serve import main as serve_main
 
-serve_main(["--requests", "6", "--rounds", "2", "--method", "session"])
+# defaults first; anything on the command line overrides them
+serve_main(["--requests", "6", "--rounds", "2", "--backend", "fused"]
+           + sys.argv[1:])

@@ -1,0 +1,228 @@
+"""One front door: config-driven readability evaluation.
+
+The paper's pitch is that readability evaluation should be a cheap,
+composable building block inside layout-generation loops.  This module
+is the single public surface for that:
+
+>>> from repro.api import EvalConfig, Evaluator
+>>> ev = Evaluator(EvalConfig(radius=0.5, n_strips=128))
+>>> scores = ev.evaluate(pos, edges)            # one layout
+>>> batch = ev.evaluate_batch(batch_pos, edges) # B layouts, one dispatch
+>>> scores.normalized()                         # [0, 1] readability view
+
+Everything is driven by the frozen, hashable
+:class:`~repro.core.keys.EvalConfig` — the ONE source of truth threaded
+through engine planning (:meth:`EvalConfig.plan_kwargs`), the serving
+session's plan-cache key, the server, and the distributed drivers.  All
+paths return the typed :class:`~repro.core.scores.ReadabilityScores`
+pytree (batch-aware fields, ``.normalized()`` view).
+
+**Metric subsets are real at trace level**: a config with
+``metrics=("edge_crossing",)`` plans no occlusion grid and its traced
+program builds zero cell buckets and runs zero vertex-key sorts; an
+occlusion-only config builds zero strip decompositions and runs zero
+reversal sweeps.  The work counters in :mod:`repro.core.grid` certify
+this (``tests/test_api.py``), and ``BENCH_engine.json`` records the
+resulting speedups — consumers that want one metric (cf. Kwon et al.'s
+one-model-per-metric predictor, PAPERS.md) pay for one metric.
+
+Backends (see :class:`~repro.core.keys.EvalConfig`): ``"fused"``
+(plan-cached jitted engine — default), ``"eager"`` (plan per call, no
+jit cache growth), ``"kernels"`` (Pallas TPU kernels), and
+``"distributed"`` (``shard_map`` drivers over a mesh).
+
+The old entry points (``repro.core.metrics.evaluate_layout``,
+``EvalSession(**kwargs)``, ``ReadabilityServer(method=...)``) remain as
+thin deprecation shims that map onto an ``EvalConfig`` and call into
+this module.
+"""
+
+from __future__ import annotations
+
+from repro.core import engine
+from repro.core.engine import ALL_METRICS  # noqa: F401  (re-export)
+from repro.core.keys import (EvalConfig, pow2_bucket,  # noqa: F401
+                             pow2_chunks, reset_deprecation_warnings,
+                             topology_hash)
+from repro.core.metrics import evaluate_exact  # noqa: F401  (re-export)
+from repro.core.scores import (ReadabilityScores,  # noqa: F401
+                               scores_from_batch, scores_from_result)
+from repro.launch.session import EvalSession
+
+__all__ = [
+    "ALL_METRICS", "EvalConfig", "EvalSession", "Evaluator",
+    "ReadabilityScores", "evaluate_exact", "evaluator_for",
+    "pow2_bucket", "pow2_chunks", "reset_deprecation_warnings",
+    "scores_from_batch", "scores_from_result", "topology_hash",
+]
+
+
+class Evaluator:
+    """Config-bound readability evaluator: plan once, evaluate many.
+
+    * :meth:`plan` — host-side :class:`~repro.core.engine.ReadabilityPlan`
+      from concrete data (hold it across a hot loop).
+    * :meth:`evaluate` — one layout -> host
+      :class:`~repro.core.scores.ReadabilityScores`.  On the fused /
+      kernels backends this is served by an internal
+      :class:`~repro.launch.session.EvalSession`, so repeated calls on
+      the same topology reuse the cached plan and jit entry (pow2 shape
+      buckets, auto-replan on overflow).  ``backend="eager"`` plans per
+      call and runs the fused program eagerly (no jit cache growth);
+      ``backend="distributed"`` routes through
+      :func:`repro.distributed.gridded.evaluate_sharded` over ``mesh``.
+    * :meth:`evaluate_batch` — ``(B, V, 2)`` candidate layouts of ONE
+      graph in one natively batched dispatch; returns a batched
+      :class:`ReadabilityScores` (fields carry a leading ``B`` dim;
+      ``.unbatch()`` splits).  Pass ``plan=`` in hot loops.
+    * :meth:`session` — a fresh :class:`EvalSession` bound to the same
+      config, for request streams that want the serving policy knobs.
+    """
+
+    def __init__(self, config: EvalConfig = None, *, mesh=None,
+                 cache_size: int = 128, vertex_floor: int = 128,
+                 edge_floor: int = 128, max_coalesce: int = 32):
+        self.config = config if config is not None else EvalConfig()
+        self.mesh = mesh
+        self._session = None
+        self._session_knobs = dict(cache_size=cache_size,
+                                   vertex_floor=vertex_floor,
+                                   edge_floor=edge_floor,
+                                   max_coalesce=max_coalesce)
+
+    def __repr__(self):
+        return f"Evaluator({self.config!r})"
+
+    # -- planning -----------------------------------------------------------
+
+    def plan(self, pos, edges) -> engine.ReadabilityPlan:
+        """Host-side plan for ``pos`` ((V, 2) or a (B, V, 2) batch)."""
+        return engine.plan_readability(pos, edges,
+                                       **self.config.plan_kwargs())
+
+    # -- sessions -----------------------------------------------------------
+
+    def session(self, **knobs) -> EvalSession:
+        """A fresh serving session bound to this config."""
+        return EvalSession(self.config, **{**self._session_knobs, **knobs})
+
+    def _bound_session(self) -> EvalSession:
+        if self._session is None:
+            self._session = self.session()
+        return self._session
+
+    def _mesh(self):
+        if self.mesh is None:
+            import jax
+            from repro.distributed.compat import make_mesh
+            self.mesh = make_mesh((len(jax.devices()),), ("eval",))
+        return self.mesh
+
+    # -- evaluation ---------------------------------------------------------
+
+    def evaluate(self, pos, edges) -> ReadabilityScores:
+        """Score one layout; returns host scores (one transfer)."""
+        backend = self.config.backend
+        if backend in ("fused", "kernels"):
+            return self._bound_session().evaluate(pos, edges)
+        if backend == "distributed":
+            from repro.distributed.gridded import evaluate_sharded
+            return evaluate_sharded(self._mesh(), pos, edges,
+                                    config=self.config)
+        # eager: plan from the concrete layout (flat strips — per-call
+        # tier shapes would churn the eager sub-op compile caches) and
+        # run the fused program without a jit cache entry
+        import numpy as np
+        pos = np.asarray(pos, np.float32)
+        edges = np.asarray(edges, np.int32)
+        plan = engine.plan_readability(
+            pos, edges, **self.config.plan_kwargs(tier_default=False))
+        res = engine.evaluate_once(plan, pos, edges,
+                                   use_kernels=self.config.use_kernels)
+        return scores_from_result(res, pos.shape[0], edges.shape[0])
+
+    def evaluate_batch(self, batch_pos, edges, *,
+                       plan: engine.ReadabilityPlan = None
+                       ) -> ReadabilityScores:
+        """Score ``(B, V, 2)`` candidate layouts of one graph in one
+        natively batched dispatch; returns a batched host
+        :class:`ReadabilityScores` (``.unbatch()`` for per-layout
+        scores).  Plans from the whole batch when ``plan`` is omitted —
+        hot loops should plan once and pass it in."""
+        import numpy as np
+        batch_pos = np.asarray(batch_pos, np.float32)
+        edges = np.asarray(edges, np.int32)
+        if batch_pos.ndim != 3:
+            raise ValueError("evaluate_batch wants a (B, V, 2) batch; "
+                             f"got shape {batch_pos.shape}")
+        backend = self.config.backend
+        if backend == "distributed":
+            from repro.distributed.gridded import evaluate_sharded
+            mesh = self._mesh()
+            per = [evaluate_sharded(mesh, p, edges, config=self.config)
+                   for p in batch_pos]
+            return _stack_scores(per, batch_pos.shape[1], edges.shape[0])
+        if plan is None:
+            plan = self.plan(batch_pos, edges)
+        if backend == "eager":
+            res = engine._evaluate_batched(plan, batch_pos, edges)
+        else:
+            res = engine.evaluate_layouts(
+                plan, batch_pos, edges,
+                use_kernels=self.config.use_kernels)
+        import jax
+        res = jax.device_get(res)
+        return res._replace(n_vertices=int(batch_pos.shape[1]),
+                            n_edges=int(edges.shape[0]))
+
+
+def _stack_scores(per, n_vertices, n_edges) -> ReadabilityScores:
+    """Stack per-layout host scores into one batched ReadabilityScores."""
+    import numpy as np
+
+    def col(name):
+        vals = [getattr(s, name) for s in per]
+        return None if vals[0] is None else np.asarray(vals)
+
+    fields = ("node_occlusion", "minimum_angle", "edge_length_variation",
+              "edge_crossing", "edge_crossing_angle",
+              "crossing_count_for_angle", "overflow")
+    return ReadabilityScores(n_vertices=int(n_vertices),
+                             n_edges=int(n_edges),
+                             **{f: col(f) for f in fields})
+
+
+# ---------------------------------------------------------------------------
+# the shared evaluator cache (what the deprecated kwarg mirrors map onto)
+# ---------------------------------------------------------------------------
+
+from collections import OrderedDict as _OrderedDict
+
+_EVALUATORS: "_OrderedDict[EvalConfig, Evaluator]" = _OrderedDict()
+_EVALUATOR_CACHE_SIZE = 64
+
+
+def evaluator_for(config: EvalConfig) -> Evaluator:
+    """The process-wide :class:`Evaluator` for ``config``.
+
+    Keyed by the (frozen, canonicalized) config itself, so every old
+    call site that spells the same configuration — whatever kwarg order
+    or legacy entry point it used — shares one evaluator, one plan
+    cache, and one set of jit entries.  This is what stops repeated
+    ``evaluate_layout`` calls from re-planning and re-tracing per call.
+
+    The cache is a small LRU (configs are few; plans inside each
+    evaluator's session have their own LRU).  Note the jit trade the
+    caching implies: every distinct *plan* holds a compiled executable
+    in jax's jit cache, which jax never evicts — a long-lived process
+    streaming unbounded distinct topologies or data-derived configs
+    should use ``EvalConfig(backend="eager")`` (plan per call, no jit
+    entries), which is the old wrapper's behavior.
+    """
+    ev = _EVALUATORS.get(config)
+    if ev is None:
+        ev = _EVALUATORS[config] = Evaluator(config)
+    _EVALUATORS.move_to_end(config)
+    while len(_EVALUATORS) > _EVALUATOR_CACHE_SIZE:
+        _EVALUATORS.popitem(last=False)
+    return ev

@@ -1,12 +1,15 @@
 """Fused readability engine: plan once, evaluate many (fast path).
 
 The paper's point is that readability evaluation must be cheap enough to
-sit *inside* layout-generation loops. :func:`repro.core.evaluate_layout`
-pays per-call overhead that defeats that: capacities are re-planned on
-the host every call, edge crossing and crossing angle each rebuild the
-identical strip decomposition and each rerun the O(cap^2 * strips)
-reversal sweep per orientation, and every metric forces its own
-device->host sync.
+sit *inside* layout-generation loops.  The old eager per-metric path
+paid per-call overhead that defeats that: capacities re-planned on
+the host every call, edge crossing and crossing angle each rebuilding the
+identical strip decomposition and each rerunning the O(cap^2 * strips)
+reversal sweep per orientation, and every metric forcing its own
+device->host sync.  (The public front door over this module is
+:mod:`repro.api`: an :class:`~repro.core.keys.EvalConfig` maps onto
+:func:`plan_readability` via ``EvalConfig.plan_kwargs``, and results are
+the shared :class:`~repro.core.scores.ReadabilityScores` pytree.)
 
 This module splits the work:
 
@@ -97,7 +100,6 @@ offending layout, floored at ``growth`` x the old ones) for a retry.
 from __future__ import annotations
 
 import dataclasses
-from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -111,6 +113,7 @@ from repro.core.edge_length import (edge_length_variation,
 from repro.core.min_angle import minimum_angle, minimum_angle_batched
 from repro.core.occlusion import (count_occlusions_gridded,
                                   count_occlusions_gridded_batched)
+from repro.core.scores import ReadabilityScores
 
 # The five paper metrics (re-exported by repro.core.metrics).
 ALL_METRICS = ("node_occlusion", "minimum_angle", "edge_length_variation",
@@ -159,6 +162,10 @@ class ReadabilityPlan:
     # per tier, order the strip ids sorted by (tier, id).  () disables
     # tiering (one flat tier at the strip_plans cap).
     strip_tiers: tuple = ()
+    # compute dtype of the traced program ("float32" | "bfloat16"); part
+    # of the plan so a precision change retraces instead of reusing a
+    # cache entry compiled for the other dtype
+    precision: str = "float32"
 
     @property
     def orientation(self) -> str:
@@ -167,20 +174,14 @@ class ReadabilityPlan:
                 return name
         return str(self.axes)
 
+    @property
+    def dtype(self):
+        return jnp.bfloat16 if self.precision == "bfloat16" else jnp.float32
 
-class EngineResult(NamedTuple):
-    """Device scalars from one fused evaluation (one transfer gets all).
 
-    Fields for metrics excluded from the plan are ``None``.
-    """
-
-    node_occlusion: Optional[jax.Array] = None
-    minimum_angle: Optional[jax.Array] = None
-    edge_length_variation: Optional[jax.Array] = None
-    edge_crossing: Optional[jax.Array] = None
-    edge_crossing_angle: Optional[jax.Array] = None
-    crossing_count_for_angle: Optional[jax.Array] = None
-    overflow: Optional[jax.Array] = None
+# The engine's evaluators return the shared typed pytree; the old name
+# stays importable for existing call sites.
+EngineResult = ReadabilityScores
 
 
 # ---------------------------------------------------------------------------
@@ -389,8 +390,8 @@ def _tiered_strip_stats(plan: "ReadabilityPlan", axis_i: int, segs, B: int,
 def plan_readability(pos, edges, *, radius: float = 0.5, ideal_angle=None,
                      n_strips: int = 64, orientation: str = "both",
                      metrics=ALL_METRICS, cell_block: int = 512,
-                     strip_block: int = 256,
-                     tier_strips: bool = True) -> ReadabilityPlan:
+                     strip_block: int = 256, tier_strips: bool = True,
+                     precision: str = "float32") -> ReadabilityPlan:
     """Build a :class:`ReadabilityPlan` from concrete data (host side).
 
     ``pos`` may be ``(V, 2)`` or a batch ``(B, V, 2)`` — a batched plan
@@ -439,7 +440,8 @@ def plan_readability(pos, edges, *, radius: float = 0.5, ideal_angle=None,
         axes=axes, metrics=metrics, grid_origin=origin, grid_nx=nx,
         grid_ny=ny, cell_cap=cell_cap, grid_cell_size=float(cell_size),
         strip_plans=tuple(strip_plans), strip_tiers=tuple(strip_tiers),
-        cell_block=int(cell_block), strip_block=int(strip_block))
+        cell_block=int(cell_block), strip_block=int(strip_block),
+        precision=str(precision))
 
 
 # ---------------------------------------------------------------------------
@@ -451,7 +453,7 @@ def _evaluate(plan: ReadabilityPlan, pos, edges, use_kernels: bool,
     global _trace_count
     if isinstance(pos, jax.core.Tracer):
         _trace_count += 1
-    pos = jnp.asarray(pos, jnp.float32)
+    pos = jnp.asarray(pos, plan.dtype)
     edges = jnp.asarray(edges, jnp.int32)
     vertex_valid = None
     if n_valid_vertices is not None:
@@ -554,9 +556,9 @@ def evaluate_once(plan: ReadabilityPlan, pos, edges, *,
     """One fused evaluation, eagerly (no jit cache entry).
 
     Same program as :func:`evaluate_planned` minus the compilation: the
-    right call when the plan is fresh-per-layout (e.g. the
-    ``evaluate_layout`` compatibility wrapper), where jitting would
-    recompile on every call and grow the jit cache without bound."""
+    right call when the plan is fresh-per-layout (the ``backend="eager"``
+    path of :class:`repro.api.Evaluator`), where jitting would recompile
+    on every call and grow the jit cache without bound."""
     return _evaluate(plan, pos, edges, use_kernels,
                      n_valid_vertices, n_valid_edges)
 
@@ -584,7 +586,7 @@ def _evaluate_batched(plan: ReadabilityPlan, batch_pos, edges,
     global _trace_count
     if isinstance(batch_pos, jax.core.Tracer):
         _trace_count += 1
-    pos = jnp.asarray(batch_pos, jnp.float32)
+    pos = jnp.asarray(batch_pos, plan.dtype)
     edges = jnp.asarray(edges, jnp.int32)
     B = pos.shape[0]
     vertex_valid = None
@@ -708,7 +710,7 @@ def replan_on_overflow(plan: ReadabilityPlan, pos, edges, result,
         n_strips=plan.n_strips, orientation=plan.orientation,
         metrics=plan.metrics, cell_block=plan.cell_block,
         strip_block=plan.strip_block,
-        tier_strips=any(plan.strip_tiers))
+        tier_strips=any(plan.strip_tiers), precision=plan.precision)
     cell_cap = max(fresh.cell_cap,
                    gridlib._round_up(int(plan.cell_cap * growth), 8))
     # per-strip growth floors: every strip's tier capacity is floored at

@@ -34,8 +34,13 @@ HALF_NEIGHBOURHOOD = ((1, 0), (0, 1), (1, 1), (1, -1))
 
 # Work counters (python side effects: bump once per eager call / per trace).
 # The engine benchmark uses these to certify the fused path really does
-# 2 strip builds + 2 reversal sweeps where the unfused path does 4 + 4.
-CALL_COUNTS = {"strip_builds": 0, "reversal_sweeps": 0}
+# 2 strip builds + 2 reversal sweeps where the unfused path does 4 + 4,
+# and the metric-subset tests use them to prove pruned configs never
+# build the decompositions they don't need (crossing-only builds zero
+# cell buckets; occlusion-only runs zero sweeps; dropping minimum_angle
+# skips the vertex-key sort).
+CALL_COUNTS = {"strip_builds": 0, "reversal_sweeps": 0, "cell_builds": 0,
+               "vertex_sorts": 0}
 
 
 def reset_call_counts():
@@ -259,6 +264,7 @@ def cell_indices(pos: jax.Array, radius, origin, nx: int, ny: int,
 def build_cell_buckets(pos: jax.Array, radius, origin, nx: int, ny: int,
                        cap: int, valid=None, cell_size=None) -> CellBuckets:
     """Bin vertices into the occlusion grid (paper fig 1 A-1/A-2)."""
+    CALL_COUNTS["cell_builds"] += 1
     _, _, cid = cell_indices(pos, radius, origin, nx, ny,
                              cell_size=cell_size)
     x, y, bvalid, counts, overflow = scatter_to_buckets(

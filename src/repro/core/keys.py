@@ -1,0 +1,226 @@
+"""Shared cache-key and configuration machinery — ONE source of truth.
+
+Before this module existed the repo had four divergent entry points
+(``engine.plan_readability``/``evaluate_planned``/``evaluate_layouts``,
+``metrics.evaluate_layout`` with ``method=``/``use_kernels=`` flag
+combos, ``EvalSession``'s hand-copied kwarg mirror, and the
+``distributed`` drivers), each re-declaring the same evaluation knobs.
+Every new capability had to be wired into all four, and the three kwarg
+mirrors drifted independently.
+
+:class:`EvalConfig` is the frozen, hashable replacement: the complete
+description of *how* to evaluate (radius, strips, orientation, metric
+subset, ideal angle, tiering, blocking, backend, precision), shared by
+
+* engine planning (:meth:`EvalConfig.plan_kwargs` ->
+  :func:`repro.core.engine.plan_readability`),
+* the serving plan-cache key (:class:`repro.launch.session.PlanCache`
+  keys off the config *directly* — no ad-hoc tuple assembly),
+* :class:`repro.api.Evaluator` / :class:`repro.launch.serve.ReadabilityServer`,
+* the distributed drivers
+  (:func:`repro.distributed.gridded.evaluate_sharded`).
+
+The shape-bucket helpers (:func:`pow2_bucket`, :func:`pow2_chunks`) and
+:func:`topology_hash` live here too so the plan-cache key and the
+request padding can never disagree.  :meth:`EvalConfig.digest` is a
+*process-stable* content hash (``hash()`` of a dataclass with string
+fields varies per process under PYTHONHASHSEED; the digest does not),
+usable in on-disk caches and cross-process plan registries.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import warnings
+from typing import Optional
+
+import numpy as np
+
+from repro.core.engine import ALL_METRICS, DEFAULT_IDEAL
+
+BACKENDS = ("fused", "eager", "kernels", "distributed")
+ORIENTATIONS = ("vertical", "horizontal", "both")
+PRECISIONS = ("float32", "bfloat16")
+
+
+# ---------------------------------------------------------------------------
+# shape buckets + topology identity (shared by cache keys and padding)
+# ---------------------------------------------------------------------------
+
+def pow2_bucket(n: int, floor: int = 128) -> int:
+    """Smallest power-of-two >= max(n, floor).
+
+    THE shape-bucket function: the plan-cache key and the request
+    padding both go through it, so they can never disagree.
+    """
+    b = int(floor)
+    n = int(n)
+    while b < n:
+        b *= 2
+    return b
+
+
+def pow2_chunks(items, max_chunk: int):
+    """Split ``items`` into descending power-of-two-sized chunks so a
+    batched evaluator only ever sees O(log B) distinct batch dims (each
+    a one-time trace) instead of one trace per group size."""
+    out = []
+    i = 0
+    while i < len(items):
+        size = 1
+        while size * 2 <= min(len(items) - i, max_chunk):
+            size *= 2
+        out.append(items[i:i + size])
+        i += size
+    return out
+
+
+def topology_hash(edges, n_vertices: int) -> str:
+    """Stable digest of an edge topology (vertex count + edge list)."""
+    h = hashlib.blake2b(digest_size=12)
+    h.update(np.int64(n_vertices).tobytes())
+    h.update(np.ascontiguousarray(edges, np.int32).tobytes())
+    return h.hexdigest()
+
+
+# ---------------------------------------------------------------------------
+# the config
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class EvalConfig:
+    """Frozen, hashable description of a readability evaluation.
+
+    Fields are canonicalized in ``__post_init__`` (metrics reordered to
+    the :data:`~repro.core.engine.ALL_METRICS` order, numbers coerced to
+    plain Python types) so two configs that *mean* the same thing are
+    ``==`` and hash alike — the property the plan cache and the jit
+    static-argument cache both rest on.
+
+    ``tier_strips=None`` means *backend-appropriate*: one-shot and
+    batch planning tier (skew-friendly sweep), serving sessions plan
+    flat (uniform drift headroom keeps steady-state traffic
+    zero-replan — see ROADMAP).  Pass an explicit bool to override
+    either.
+
+    ``precision="bfloat16"`` runs the traced program in bf16 — an
+    accelerator memory/bandwidth trade that makes the *geometric
+    predicates approximate* (a bf16 coordinate near 100 resolves to
+    ~0.5, so crossing/occlusion counts drift by percents, not ulps).
+    Leave it at ``"float32"`` unless the workload tolerates approximate
+    counts.
+
+    ``backend`` picks the execution strategy of
+    :class:`repro.api.Evaluator`:
+
+    * ``"fused"`` — plan-cached, shape-bucketed, jitted fused engine
+      (the default fast path);
+    * ``"eager"`` — plan per call, eager fused program (no jit cache
+      growth; the old ``evaluate_layout`` behavior);
+    * ``"kernels"`` — like fused, but the reversal sweep and the
+      occlusion count route through the Pallas TPU kernels;
+    * ``"distributed"`` — ``shard_map`` drivers over a device mesh.
+    """
+
+    radius: float = 0.5
+    n_strips: int = 64
+    orientation: str = "both"
+    metrics: tuple = ALL_METRICS
+    ideal_angle: float = DEFAULT_IDEAL
+    tier_strips: Optional[bool] = None
+    cell_block: int = 512
+    strip_block: int = 256
+    backend: str = "fused"
+    precision: str = "float32"
+
+    def __post_init__(self):
+        if self.orientation not in ORIENTATIONS:
+            raise ValueError(f"orientation must be one of {ORIENTATIONS}, "
+                             f"got {self.orientation!r}")
+        if self.backend not in BACKENDS:
+            raise ValueError(f"backend must be one of {BACKENDS}, "
+                             f"got {self.backend!r}")
+        if self.precision not in PRECISIONS:
+            raise ValueError(f"precision must be one of {PRECISIONS}, "
+                             f"got {self.precision!r}")
+        metrics = (self.metrics,) if isinstance(self.metrics, str) \
+            else tuple(self.metrics)
+        unknown = [m for m in metrics if m not in ALL_METRICS]
+        if unknown:
+            raise ValueError(f"unknown metrics {unknown}; "
+                             f"choose from {ALL_METRICS}")
+        if not metrics:
+            raise ValueError("metrics must not be empty")
+        # canonical order: membership is what matters downstream, so two
+        # configs selecting the same subset must be == and hash alike
+        object.__setattr__(self, "metrics",
+                           tuple(m for m in ALL_METRICS if m in metrics))
+        ideal = DEFAULT_IDEAL if self.ideal_angle is None else self.ideal_angle
+        object.__setattr__(self, "ideal_angle", float(ideal))
+        object.__setattr__(self, "radius", float(self.radius))
+        object.__setattr__(self, "n_strips", int(self.n_strips))
+        object.__setattr__(self, "cell_block", int(self.cell_block))
+        object.__setattr__(self, "strip_block", int(self.strip_block))
+        if self.tier_strips is not None:
+            object.__setattr__(self, "tier_strips", bool(self.tier_strips))
+
+    # -- derived views -----------------------------------------------------
+
+    @property
+    def use_kernels(self) -> bool:
+        return self.backend == "kernels"
+
+    def plan_kwargs(self, *, tier_default: bool = True) -> dict:
+        """Keyword arguments for
+        :func:`repro.core.engine.plan_readability` — the ONE mapping
+        from config to plan, used by every front end."""
+        tier = self.tier_strips if self.tier_strips is not None \
+            else tier_default
+        return dict(radius=self.radius, ideal_angle=self.ideal_angle,
+                    n_strips=self.n_strips, orientation=self.orientation,
+                    metrics=self.metrics, cell_block=self.cell_block,
+                    strip_block=self.strip_block, tier_strips=tier,
+                    precision=self.precision)
+
+    def digest(self) -> str:
+        """Process-stable content hash of the (canonicalized) config."""
+        payload = repr(dataclasses.astuple(self)).encode()
+        return hashlib.blake2b(payload, digest_size=12).hexdigest()
+
+    @classmethod
+    def from_legacy(cls, *, radius: float = 0.5, n_strips: int = 64,
+                    orientation: str = "both", metrics=ALL_METRICS,
+                    ideal_angle=None, use_kernels: bool = False,
+                    backend: Optional[str] = None,
+                    tier_strips: Optional[bool] = None) -> "EvalConfig":
+        """Map one of the old kwarg mirrors onto a config (shim glue)."""
+        if backend is None:
+            backend = "kernels" if use_kernels else "fused"
+        return cls(radius=radius, n_strips=n_strips, orientation=orientation,
+                   metrics=tuple(metrics), ideal_angle=ideal_angle,
+                   tier_strips=tier_strips, backend=backend)
+
+
+# ---------------------------------------------------------------------------
+# deprecation plumbing (each shim warns exactly once per process)
+# ---------------------------------------------------------------------------
+
+_WARNED: set = set()
+
+
+def warn_once(key: str, message: str, *, stacklevel: int = 3) -> None:
+    """Issue ``DeprecationWarning`` once per ``key`` per process.
+
+    The shims (``evaluate_layout``, ``EvalSession(**kwargs)``,
+    ``ReadabilityServer(method=...)``) all warn through here so steady
+    traffic through old call sites logs one line, not millions."""
+    if key in _WARNED:
+        return
+    _WARNED.add(key)
+    warnings.warn(message, DeprecationWarning, stacklevel=stacklevel)
+
+
+def reset_deprecation_warnings() -> None:
+    """Forget which shims already warned (test hook)."""
+    _WARNED.clear()

@@ -1,32 +1,30 @@
-"""Unified readability-evaluation API (the paper's contribution, packaged).
+"""Legacy unified evaluation API — now thin shims over ``repro.api``.
 
-``evaluate_layout`` computes the five readability metrics of the paper for
-a 2-D layout, with either the exact (all-pairs) or the enhanced (grid /
-strip) algorithms. ``M_a`` and ``M_l`` have one algorithm each (they are
-cheap); ``N_c``, ``E_c``, ``E_ca`` switch on ``method``.
+The public front door is :mod:`repro.api`: a frozen
+:class:`~repro.core.keys.EvalConfig` plus
+:class:`~repro.api.Evaluator`, returning
+:class:`~repro.core.scores.ReadabilityScores`.  This module keeps the
+pre-api surface importable:
 
-The enhanced path is a thin compatibility wrapper over the fused engine
-(:mod:`repro.core.engine`): it plans capacities, runs the engine's fused
-evaluation (shared decompositions, one fused reversal sweep per
-orientation, one device->host transfer), and unpacks the result into a
-:class:`ReadabilityReport`.  It runs the fused program *eagerly*: plans
-here derive from the concrete positions, so jitting per call would
-recompile on nearly every new layout and grow the jit cache without
-bound.  Callers that evaluate the same graph repeatedly should plan once
-(:func:`repro.core.engine.plan_readability`) and call the jit-compiled
-:func:`repro.core.engine.evaluate_planned` /
-:func:`repro.core.engine.evaluate_layouts` directly.
+* :func:`evaluate_layout` — DEPRECATED kwarg mirror.  The enhanced
+  path now routes through a module-level *cached* Evaluator (keyed by
+  the equivalent ``EvalConfig``), so repeated eager calls on
+  same-topology inputs hit the plan cache and the jit cache instead of
+  re-planning and re-tracing per call (the old wrapper re-planned every
+  time).  ``method="exact"`` routes to :func:`evaluate_exact`.
+* ``ReadabilityReport`` — alias of :class:`ReadabilityScores` (the old
+  dataclass, NamedTuple-shaped results, and the server dicts were three
+  spellings of the same record).
+* :func:`report_from_result` / :func:`reports_from_batch` — aliases of
+  the :mod:`repro.core.scores` conversions.
 
-This module is single-device; the multi-device drivers wrap the same
-building blocks with ``shard_map`` (:mod:`repro.distributed`).
+:func:`evaluate_exact` (the paper's S3.1 all-pairs algorithms) is NOT
+deprecated — it is the exact-reference front door, re-exported by
+:mod:`repro.api`.
 """
 
 from __future__ import annotations
 
-import dataclasses
-from typing import Optional
-
-import jax
 import jax.numpy as jnp
 
 from repro.core import engine
@@ -34,113 +32,42 @@ from repro.core.crossing import count_crossings_exact
 from repro.core.crossing_angle import DEFAULT_IDEAL, crossing_angle_exact
 from repro.core.edge_length import edge_length_variation
 from repro.core.engine import ALL_METRICS  # noqa: F401  (re-export)
+from repro.core.keys import EvalConfig, warn_once
 from repro.core.min_angle import minimum_angle
 from repro.core.occlusion import count_occlusions_exact
+from repro.core.scores import (ReadabilityScores, scores_from_batch,
+                               scores_from_result)
+
+# Legacy names: one typed result for every path (see repro.core.scores).
+ReadabilityReport = ReadabilityScores
+report_from_result = scores_from_result
+reports_from_batch = scores_from_batch
 
 
-@dataclasses.dataclass(frozen=True)
-class ReadabilityReport:
-    node_occlusion: Optional[int] = None          # N_c (count)
-    minimum_angle: Optional[float] = None         # M_a in [0, 1]
-    edge_length_variation: Optional[float] = None  # M_l
-    edge_crossing: Optional[int] = None           # E_c (count)
-    edge_crossing_angle: Optional[float] = None   # E_ca in [0, 1]
-    crossing_count_for_angle: Optional[int] = None
-    overflow: int = 0                             # capacity drops (enhanced)
+def evaluate_exact(pos, edges, *, config: EvalConfig = None,
+                   use_kernels: bool = False) -> ReadabilityScores:
+    """Exact (all-pairs, paper S3.1) readability scores.
 
-    def asdict(self):
-        return dataclasses.asdict(self)
-
-
-def report_from_result(res: engine.EngineResult) -> ReadabilityReport:
-    """Convert one (unbatched) :class:`engine.EngineResult` to a report.
-
-    Fetches every scalar in a single batched device->host transfer."""
-    res = jax.device_get(res)
-    return ReadabilityReport(
-        node_occlusion=(None if res.node_occlusion is None
-                        else int(res.node_occlusion)),
-        minimum_angle=(None if res.minimum_angle is None
-                       else float(res.minimum_angle)),
-        edge_length_variation=(None if res.edge_length_variation is None
-                               else float(res.edge_length_variation)),
-        edge_crossing=(None if res.edge_crossing is None
-                       else int(res.edge_crossing)),
-        edge_crossing_angle=(None if res.edge_crossing_angle is None
-                             else float(res.edge_crossing_angle)),
-        crossing_count_for_angle=(None if res.crossing_count_for_angle is None
-                                  else int(res.crossing_count_for_angle)),
-        overflow=int(res.overflow))
-
-
-def reports_from_batch(res: engine.EngineResult):
-    """Split a batched :class:`engine.EngineResult` (leading B dim on every
-    field) into a list of B :class:`ReadabilityReport`; one transfer."""
-    res = jax.device_get(res)
-    some = next(f for f in res if f is not None)
-    batch = some.shape[0]
-
-    def pick(field, i, cast):
-        return None if field is None else cast(field[i])
-
-    return [ReadabilityReport(
-        node_occlusion=pick(res.node_occlusion, i, int),
-        minimum_angle=pick(res.minimum_angle, i, float),
-        edge_length_variation=pick(res.edge_length_variation, i, float),
-        edge_crossing=pick(res.edge_crossing, i, int),
-        edge_crossing_angle=pick(res.edge_crossing_angle, i, float),
-        crossing_count_for_angle=pick(res.crossing_count_for_angle, i, int),
-        overflow=pick(res.overflow, i, int)) for i in range(batch)]
-
-
-def evaluate_layout(pos, edges, *, radius: float = 0.5,
-                    ideal_angle=DEFAULT_IDEAL, method: str = "enhanced",
-                    metrics=ALL_METRICS, n_strips: int = 64,
-                    orientation: str = "both",
-                    use_kernels: bool = False) -> ReadabilityReport:
-    """Evaluate readability metrics of a layout.
-
-    Args:
-      pos: (V, 2) vertex coordinates.
-      edges: (E, 2) int vertex-id pairs.
-      radius: node disc radius (occlusion threshold is 2*radius).
-      ideal_angle: ideal crossing angle in radians (default 70 deg).
-      method: 'exact' (all-pairs, paper S3.1) or 'enhanced' (grid/strips,
-        paper S3.2; fused engine).
-      metrics: subset of ALL_METRICS to compute.
-      n_strips: strip count for the enhanced crossing algorithms.
-      orientation: 'vertical' | 'horizontal' | 'both' (enhanced only).
-      use_kernels: route the metric inner loops through the Pallas TPU
-        kernels (interpret mode off-TPU): enhanced -> strip reversal +
-        pairwise occlusion; exact -> pairwise occlusion, CCW segment
-        crossing, fused crossing-angle.
+    The exact reference path: O(V^2) occlusion, O(E^2) CCW crossing
+    sweep, exact crossing angles.  ``config`` supplies ``radius``,
+    ``ideal_angle`` and the metric subset (``n_strips`` / orientation /
+    backend are meaningless here and ignored).  ``use_kernels`` routes
+    the pairwise sweeps through the Pallas kernels (interpret mode
+    off-TPU).
     """
+    config = config or EvalConfig()
     pos = jnp.asarray(pos, jnp.float32)
     edges = jnp.asarray(edges, jnp.int32)
-
-    if method != "exact":
-        # tier_strips=False: this wrapper re-plans per call, so tiered
-        # plans would give every call fresh data-dependent tier shapes
-        # and churn the eager sub-op compile caches; the flat cap keeps
-        # per-call shapes as stable as the pre-tiering path.
-        plan = engine.plan_readability(
-            pos, edges, radius=radius, ideal_angle=float(ideal_angle),
-            n_strips=n_strips, orientation=orientation,
-            metrics=tuple(metrics), tier_strips=False)
-        # eager on purpose: the plan is data-derived, so a jitted call
-        # would recompile per layout (see module docstring)
-        res = engine.evaluate_once(plan, pos, edges,
-                                   use_kernels=use_kernels)
-        return report_from_result(res)
-
+    metrics = config.metrics
     if use_kernels:
         from repro.kernels.ops import (crossing_angle_op, crossing_count_op,
                                        occlusion_count_op)
     out = {}
     if "node_occlusion" in metrics:
-        out["node_occlusion"] = int(occlusion_count_op(pos, radius)
+        out["node_occlusion"] = int(occlusion_count_op(pos, config.radius)
                                     if use_kernels
-                                    else count_occlusions_exact(pos, radius))
+                                    else count_occlusions_exact(
+                                        pos, config.radius))
     if "minimum_angle" in metrics:
         m_a, _ = minimum_angle(pos, edges)
         out["minimum_angle"] = float(m_a)
@@ -153,13 +80,52 @@ def evaluate_layout(pos, edges, *, radius: float = 0.5,
     if "edge_crossing_angle" in metrics:
         if use_kernels:
             count, dev = crossing_angle_op(pos, edges,
-                                           ideal=float(ideal_angle))
+                                           ideal=config.ideal_angle)
             count = int(count)
             out["edge_crossing_angle"] = (
                 1.0 - float(dev) / count if count > 0 else 1.0)
         else:
             e_ca, count, _ = crossing_angle_exact(pos, edges,
-                                                  ideal=ideal_angle)
+                                                  ideal=config.ideal_angle)
             out["edge_crossing_angle"] = float(e_ca)
         out["crossing_count_for_angle"] = int(count)
-    return ReadabilityReport(overflow=0, **out)
+    return ReadabilityScores(overflow=0, n_vertices=int(pos.shape[0]),
+                             n_edges=int(edges.shape[0]), **out)
+
+
+def evaluate_layout(pos, edges, *, radius: float = 0.5,
+                    ideal_angle=DEFAULT_IDEAL, method: str = "enhanced",
+                    metrics=ALL_METRICS, n_strips: int = 64,
+                    orientation: str = "both",
+                    use_kernels: bool = False) -> ReadabilityScores:
+    """DEPRECATED: use :class:`repro.api.Evaluator` (or
+    :func:`repro.api.evaluate_exact` for ``method="exact"``).
+
+    Kwargs map 1:1 onto :class:`~repro.core.keys.EvalConfig`; the
+    enhanced path is served by a cached Evaluator keyed on that config,
+    so repeated calls on the same topology reuse its plan and its jit
+    entry instead of re-planning and re-tracing per call.  (Each
+    distinct plan keeps one compiled executable in jax's jit cache; a
+    stream of unbounded distinct topologies should use
+    ``Evaluator(EvalConfig(backend="eager"))`` — the old per-call
+    behavior — instead of this shim.)
+    """
+    warn_once(
+        "evaluate_layout",
+        "evaluate_layout is deprecated: build an EvalConfig and use "
+        "repro.api.Evaluator (evaluate_exact for method='exact'); this "
+        "shim maps onto the cached config-keyed Evaluator")
+    config = EvalConfig.from_legacy(
+        radius=radius, n_strips=n_strips, orientation=orientation,
+        metrics=metrics, ideal_angle=float(ideal_angle),
+        use_kernels=use_kernels)
+    if method == "exact":
+        return evaluate_exact(pos, edges, config=config,
+                              use_kernels=use_kernels)
+    from repro import api
+    return api.evaluator_for(config).evaluate(pos, edges)
+
+
+# kept for callers that built reports by hand; the engine module is the
+# canonical home of the result type now
+EngineResult = engine.EngineResult

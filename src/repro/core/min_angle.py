@@ -19,12 +19,14 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.core import grid as gridlib
 from repro.core.geometry import TWO_PI, directed_angle
 
 
 def minimum_angle(pos: jax.Array, edges: jax.Array, *, n_vertices=None,
                   edge_valid=None):
     """Returns (M_a, per-vertex mask of counted vertices)."""
+    gridlib.CALL_COUNTS["vertex_sorts"] += 1
     V = pos.shape[0] if n_vertices is None else n_vertices
     E = edges.shape[0]
     if edge_valid is None:
@@ -84,6 +86,7 @@ def minimum_angle_batched(pos: jax.Array, edges: jax.Array, *,
     every reduction is bit-identical to the segment-op path.  Returns
     ``(m_a (B,), counted (B, V))``.
     """
+    gridlib.CALL_COUNTS["vertex_sorts"] += 1
     B, V = pos.shape[0], pos.shape[1]
     E = edges.shape[0]
     if edge_valid is None:

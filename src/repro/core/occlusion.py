@@ -142,6 +142,7 @@ def count_occlusions_gridded_batched(pos: jax.Array, radius, origin, nx: int,
 
     B, V = pos.shape[0], pos.shape[1]
     n_cells = nx * ny
+    gridlib.CALL_COUNTS["cell_builds"] += 1
     size = 2.0 * radius if cell_size is None else cell_size
     ix = jnp.clip(jnp.floor((pos[..., 0] - origin[0]) / size)
                   .astype(jnp.int32), 0, nx - 1)

@@ -84,6 +84,92 @@ def sharded_reversal_stats(mesh: Mesh, buckets: SegmentBuckets, *,
     return (count,)
 
 
+def evaluate_sharded(mesh: Mesh, pos, edges, *, config=None, plan=None):
+    """Config-driven distributed front door: one
+    :class:`~repro.core.keys.EvalConfig` -> one
+    :class:`~repro.core.scores.ReadabilityScores`, computed over ``mesh``.
+
+    The same config object that drives :class:`repro.api.Evaluator` and
+    the serving session selects the metric subset, radius, strips, and
+    ideal angle here; ``Evaluator(EvalConfig(backend="distributed"),
+    mesh=...)`` routes through this function.  Work placement:
+
+    * ``N_c`` — the row-sharded exact pairwise sweep
+      (:func:`repro.distributed.pairwise.sharded_occlusion_count`; the
+      grid count equals it bit-for-bit, paper Table 3);
+    * ``E_c`` / ``E_ca`` — per-orientation strip decomposition from the
+      shared plan, swept by :func:`sharded_reversal_stats` (the same
+      :func:`~repro.core.engine.fused_reversal_block` formula as every
+      single-device path), best orientation picked like the engine;
+    * ``M_a`` / ``M_l`` — O(E log E) / O(E): single-device, never worth
+      a collective.
+
+    Skipped metrics are skipped for real: a crossing-only config builds
+    no cell buckets and an occlusion-only config launches no reversal
+    sweep (same pruning contract as the fused engine).
+    """
+    from repro.core import grid as gridlib
+    from repro.core import engine as _engine
+    from repro.core.edge_length import edge_length_variation
+    from repro.core.keys import EvalConfig
+    from repro.core.min_angle import minimum_angle
+    from repro.core.scores import ReadabilityScores
+    from repro.distributed.pairwise import sharded_occlusion_count
+
+    config = config or EvalConfig()
+    pos = jnp.asarray(pos, jnp.float32)
+    edges = jnp.asarray(edges, jnp.int32)
+    if plan is None:
+        # flat strips: the sharded sweep consumes the dense flat bucket
+        # layout (tiering is a single-device pair-tile optimization)
+        plan = _engine.plan_readability(
+            pos, edges, **config.plan_kwargs(tier_default=False))
+    m = config.metrics
+    out = {}
+    overflow = 0
+
+    if "node_occlusion" in m:
+        out["node_occlusion"] = int(sharded_occlusion_count(
+            mesh, pos, config.radius))
+    if "minimum_angle" in m:
+        m_a, _ = minimum_angle(pos, edges)
+        out["minimum_angle"] = float(m_a)
+    if "edge_length_variation" in m:
+        out["edge_length_variation"] = float(edge_length_variation(pos,
+                                                                   edges))
+
+    want_ec = "edge_crossing" in m
+    want_eca = "edge_crossing_angle" in m
+    if want_ec or want_eca:
+        stats = []
+        for axis, (max_segments, cap) in zip(plan.axes, plan.strip_plans):
+            segs = gridlib.build_strip_segments(
+                pos, edges, plan.n_strips, max_segments, axis=axis)
+            buckets = gridlib.bucketize_segments(segs, plan.n_strips, cap)
+            res = sharded_reversal_stats(
+                mesh, buckets,
+                ideal_angle=plan.ideal if want_eca else None)
+            cnt = int(res[0])
+            dev = float(res[1]) if want_eca else 0.0
+            stats.append((cnt, dev, int(buckets.overflow)))
+        # best orientation = most crossings; strictly-greater keeps
+        # axis 0 on ties (the engine's rule)
+        best = max(range(len(stats)), key=lambda i: (stats[i][0], -i))
+        ec_count = max(s[0] for s in stats)
+        overflow += max(s[2] for s in stats)
+        if want_ec:
+            out["edge_crossing"] = ec_count
+        if want_eca:
+            cnt, dev, _ = stats[best]
+            out["edge_crossing_angle"] = (1.0 - dev / cnt if cnt > 0
+                                          else 1.0)
+            out["crossing_count_for_angle"] = cnt
+
+    return ReadabilityScores(overflow=overflow,
+                             n_vertices=int(pos.shape[0]),
+                             n_edges=int(edges.shape[0]), **out)
+
+
 def lower_sharded_reversal(mesh: Mesh, n_strips: int, cap: int, *,
                            strip_block: int = 64, with_angle: bool = False,
                            ideal_angle=None):

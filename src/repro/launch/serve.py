@@ -1,14 +1,23 @@
 """Serving driver: batched readability evaluation *and* LM decode.
 
 The paper's system is an evaluation service: graph layouts come in,
-readability reports go out.  ``ReadabilityServer`` is that service — a
-thin front over :class:`repro.launch.session.EvalSession`, which caches
-plans per (topology, shape bucket), pads requests into power-of-two
-buckets, coalesces same-bucket same-topology requests into single
-batched engine dispatches, and auto-replans (once) on capacity overflow.
-Steady-state traffic is zero-replan and zero-retrace; ``stats`` shows
-the counters.  ``method="enhanced"`` / ``"exact"`` keep the old
-per-request eager ``evaluate_layout`` path as a fallback.
+readability scores go out.  ``ReadabilityServer`` is that service — a
+thin front over :class:`repro.launch.session.EvalSession`, configured by
+ONE frozen :class:`~repro.core.keys.EvalConfig`:
+
+* ``backend="fused"`` / ``"kernels"`` (default): plan-cache per
+  (topology, shape bucket, config), pow2 request padding, same-bucket
+  coalescing into single batched engine dispatches, auto-replan (once)
+  on capacity overflow.  Steady-state traffic is zero-replan and
+  zero-retrace; ``stats`` shows the counters.
+* ``backend="eager"``: per-request plan + eager fused evaluation — the
+  pre-session behavior, kept as the honest baseline and escape hatch.
+
+The old ``ReadabilityServer(method=..., n_strips=..., ...)`` kwarg
+mirror stays as a deprecation shim mapping onto ``EvalConfig``
+(``method="session"`` -> fused backend, ``"enhanced"`` -> eager
+backend, ``"exact"`` -> the all-pairs reference path).
+
 ``lm_generate`` drives the prefill+decode path for the LM archs (used by
 the serving smoke tests).
 
@@ -24,33 +33,70 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.metrics import ReadabilityReport, evaluate_layout
+from repro.core.keys import EvalConfig, warn_once
+from repro.core.scores import ReadabilityScores  # noqa: F401  (re-export)
 from repro.launch.session import EvalSession
+
+# the server's historical default strip count (finer than the engine's
+# 64: serving traffic skews larger than unit-test graphs)
+DEFAULT_N_STRIPS = 256
+
+_LEGACY_EVAL_KWARGS = ("radius", "ideal_angle", "metrics", "orientation",
+                       "use_kernels", "n_strips", "tier_strips")
 
 
 class ReadabilityServer:
     """Batched readability evaluation with plan caching + shape bucketing.
 
-    Requests are (pos, edges) pairs.  The default ``method="session"``
-    routes them through the fused engine's plan-once/evaluate-many path;
-    ``"enhanced"``/``"exact"`` fall back to the eager per-request
-    compatibility wrapper (the pre-session behavior, kept for parity
-    checks and as an escape hatch).
+    ``ReadabilityServer(config)`` is the canonical constructor; the
+    keyword knobs (``cache_size``, ``vertex_floor``, ``edge_floor``,
+    ``max_coalesce``) are serving policy.  Requests are (pos, edges)
+    pairs.
     """
 
-    # session kwargs that the eager evaluate_layout fallback understands
-    # (the rest — cache sizing, coalescing — only exist for sessions)
-    _FALLBACK_KWARGS = ("radius", "ideal_angle", "metrics", "orientation",
-                        "use_kernels")
-
-    def __init__(self, method: str = "session", n_strips: int = 256,
-                 **session_kwargs):
-        self.method = method
-        self.n_strips = n_strips
-        self.session = (EvalSession(n_strips=n_strips, **session_kwargs)
-                        if method == "session" else None)
-        self._eval_kwargs = {k: v for k, v in session_kwargs.items()
-                             if k in self._FALLBACK_KWARGS}
+    def __init__(self, config: EvalConfig = None, *, method: str = None,
+                 cache_size: int = 128, vertex_floor: int = 128,
+                 edge_floor: int = 128, max_coalesce: int = 32,
+                 **legacy_kwargs):
+        if isinstance(config, str):   # old positional method argument
+            method, config = config, None
+        self._exact = False
+        self._fallback_kernels = False
+        if method is not None or legacy_kwargs:
+            if config is not None:
+                raise TypeError("pass either an EvalConfig or the legacy "
+                                "method=/kwarg mirror, not both")
+            bad = sorted(set(legacy_kwargs) - set(_LEGACY_EVAL_KWARGS))
+            if bad:
+                raise TypeError(f"unknown ReadabilityServer kwargs: {bad}")
+            warn_once(
+                "ReadabilityServer method",
+                "ReadabilityServer(method=..., n_strips=..., ...) is "
+                "deprecated: pass ReadabilityServer(EvalConfig(...)) — "
+                "method='session' maps to backend='fused', 'enhanced' to "
+                "backend='eager', 'exact' to the all-pairs reference")
+            method = method or "session"
+            legacy_kwargs.setdefault("n_strips", DEFAULT_N_STRIPS)
+            if method == "session":
+                config = EvalConfig.from_legacy(**legacy_kwargs)
+            else:
+                self._exact = method == "exact"
+                self._fallback_kernels = bool(
+                    legacy_kwargs.pop("use_kernels", False))
+                config = EvalConfig.from_legacy(backend="eager",
+                                                **legacy_kwargs)
+        self.config = config if config is not None else \
+            EvalConfig(n_strips=DEFAULT_N_STRIPS)
+        self.method = ("exact" if self._exact else
+                       "session" if self.config.backend in ("fused",
+                                                            "kernels")
+                       else "enhanced")
+        self.session = (EvalSession(self.config, cache_size=cache_size,
+                                    vertex_floor=vertex_floor,
+                                    edge_floor=edge_floor,
+                                    max_coalesce=max_coalesce)
+                        if self.method == "session" else None)
+        self._evaluator = None
         self._stats = {"requests": 0, "evals": 0}
 
     @property
@@ -64,7 +110,27 @@ class ReadabilityServer:
             s["plan_cache_evictions"] = self.session.plans.evictions
         return s
 
-    def evaluate(self, pos, edges) -> ReadabilityReport:
+    def _eager_evaluate(self, pos, edges):
+        if self._exact:
+            from repro.core.metrics import evaluate_exact
+            return evaluate_exact(pos, edges, config=self.config,
+                                  use_kernels=self._fallback_kernels)
+        if self._fallback_kernels:
+            # legacy method="enhanced" + use_kernels=True: an eager
+            # backend can't spell kernel routing in the config, so run
+            # the engine directly (plan flat per call, Pallas sweeps)
+            from repro.core import engine
+            from repro.core.scores import scores_from_result
+            plan = engine.plan_readability(
+                pos, edges, **self.config.plan_kwargs(tier_default=False))
+            res = engine.evaluate_once(plan, pos, edges, use_kernels=True)
+            return scores_from_result(res, pos.shape[0], edges.shape[0])
+        from repro.api import Evaluator
+        if self._evaluator is None:
+            self._evaluator = Evaluator(self.config)
+        return self._evaluator.evaluate(pos, edges)
+
+    def evaluate(self, pos, edges) -> ReadabilityScores:
         return self.evaluate_batch([(pos, edges)])[0]
 
     def evaluate_batch(self, requests):
@@ -73,10 +139,8 @@ class ReadabilityServer:
             reports = self.session.evaluate_batch(requests)
         else:
             reports = [
-                evaluate_layout(np.asarray(pos, np.float32),
-                                np.asarray(edges, np.int32),
-                                method=self.method, n_strips=self.n_strips,
-                                **self._eval_kwargs)
+                self._eager_evaluate(np.asarray(pos, np.float32),
+                                     np.asarray(edges, np.int32))
                 for pos, edges in requests]
         self._stats["evals"] += len(requests)
         return reports
@@ -103,17 +167,26 @@ def lm_generate(params, cfg, prompt_tokens, n_new: int):
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--requests", type=int, default=8)
-    ap.add_argument("--method", default="session",
-                    choices=("session", "enhanced", "exact"))
+    ap.add_argument("--backend", default="fused",
+                    choices=("fused", "eager", "kernels"),
+                    help="EvalConfig backend: 'fused' is the plan-cached "
+                         "session path, 'eager' the per-request baseline")
+    ap.add_argument("--metrics", default="all",
+                    help="comma-separated metric subset, or 'all'")
     ap.add_argument("--rounds", type=int, default=2,
                     help="times the request stream repeats (round 2+ is "
                          "the steady state: all plans cached)")
     args = ap.parse_args(argv)
 
+    from repro.core.engine import ALL_METRICS
     from repro.graphs.datasets import random_edges
     from repro.graphs.layouts import random_layout
 
-    server = ReadabilityServer(method=args.method)
+    metrics = (ALL_METRICS if args.metrics == "all"
+               else tuple(args.metrics.split(",")))
+    config = EvalConfig(n_strips=DEFAULT_N_STRIPS, backend=args.backend,
+                        metrics=metrics)
+    server = ReadabilityServer(config)
     rounds = max(args.rounds, 1)
     rng = np.random.default_rng(0)
     reqs = []
@@ -129,10 +202,20 @@ def main(argv=None):
              for pos, e in reqs] if r else reqs)
     dt = time.time() - t0
     for i, r in enumerate(reports):
-        print(f"req {i}: N_c={r.node_occlusion} E_c={r.edge_crossing} "
-              f"M_a={r.minimum_angle:.3f} M_l={r.edge_length_variation:.3f} "
-              f"E_ca={r.edge_crossing_angle:.3f}")
+        parts = [f"req {i}:"]
+        for name, fmt in (("node_occlusion", "N_c={}"),
+                          ("edge_crossing", "E_c={}")):
+            if getattr(r, name) is not None:
+                parts.append(fmt.format(getattr(r, name)))
+        for name, fmt in (("minimum_angle", "M_a={:.3f}"),
+                          ("edge_length_variation", "M_l={:.3f}"),
+                          ("edge_crossing_angle", "E_ca={:.3f}")):
+            if getattr(r, name) is not None:
+                parts.append(fmt.format(getattr(r, name)))
+        print(" ".join(parts))
     n_total = args.requests * rounds
+    print(f"config: backend={config.backend} metrics={config.metrics} "
+          f"digest={config.digest()}")
     print(f"{n_total} requests in {dt:.2f}s "
           f"({dt / n_total * 1e3:.0f} ms/req incl. warmup compiles)")
     stats = server.stats

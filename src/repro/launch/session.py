@@ -1,23 +1,31 @@
 """Serving session: plan cache, padded shape buckets, auto-replan,
-cross-request batching.
+cross-request batching — config-driven.
 
 This is the steady-state fast path the paper's use case implies (score
 layout streams fast enough to sit inside generation loops).  A request is
 ``(pos, edges)``; the session turns a stream of them into a small number
 of fused engine dispatches:
 
-  request --> pow2 shape buckets (V, E rounded up; one bucket function
-              shared by the plan-cache key and the padding)
-          --> :class:`PlanCache` LRU  [(topology, buckets, metric cfg)
+  request --> pow2 shape buckets (V, E rounded up; one bucket function —
+              :func:`repro.core.keys.pow2_bucket` — shared by the
+              plan-cache key and the padding)
+          --> :class:`PlanCache` LRU  [(topology, buckets,
+              :class:`~repro.core.keys.EvalConfig`)
               -> :class:`~repro.core.engine.ReadabilityPlan`]
           --> coalesce same-key requests into ``(B, V_pad, 2)`` batches
               --> ONE :func:`~repro.core.engine.evaluate_layouts` dispatch
               (natively batched: one composite-key sort per bucketing
               step and one occupancy-tiered sweep per orientation serve
-              the whole coalesced batch — coalescing is now strictly
-              cheaper than dispatching requests one by one)
-          --> :class:`~repro.core.metrics.ReadabilityReport` per request
+              the whole coalesced batch)
+          --> :class:`~repro.core.scores.ReadabilityScores` per request
               (one device->host transfer per dispatch)
+
+The evaluation semantics come from ONE object: the frozen
+:class:`~repro.core.keys.EvalConfig`, which is itself the tail of the
+plan-cache key (no hand-assembled metric/kwarg tuples — a config change
+is a key change, period).  Metric subsets are first-class: a
+crossing-only config plans no occlusion grid and its traced program
+builds no cell buckets (see the counters in :mod:`repro.core.grid`).
 
 Padded tail vertices/edges are masked out on device via the engine's
 ``n_valid_vertices`` / ``n_valid_edges`` traced scalars, so every natural
@@ -28,53 +36,51 @@ trips; the session re-plans with grown capacities
 (:func:`~repro.core.engine.replan_on_overflow`), retries the dispatch
 once, and caches the bigger plan.  After warmup, steady-state traffic is
 zero-replan and zero-retrace — the ``stats`` counters prove it.
+
+Sessions plan FLAT strips (``tier_strips`` default ``False`` here, via
+``EvalConfig.plan_kwargs(tier_default=False)``): a cached plan serves a
+*stream* of same-topology layouts whose occupancy drifts between strips,
+and the flat cap's uniform headroom absorbs that drift where tight
+per-strip tiers would trip overflow -> replan -> retrace mid-steady-state.
+An explicit ``EvalConfig(tier_strips=True)`` overrides.
+
+The old ``EvalSession(radius=..., n_strips=..., ...)`` kwarg mirror is a
+deprecation shim mapping onto :class:`~repro.core.keys.EvalConfig`.
 """
 
 from __future__ import annotations
 
-import hashlib
 from collections import OrderedDict
 
 import numpy as np
 
 from repro.core import engine
-from repro.core.metrics import report_from_result, reports_from_batch
+from repro.core.keys import (EvalConfig, pow2_bucket, pow2_chunks,
+                             topology_hash, warn_once)
+from repro.core.scores import scores_from_batch, scores_from_result
 
 # Park coordinate for padded tail vertices: far outside any real layout
 # extent.  Correctness rests on the n_valid masks, not on this value —
 # the park just keeps padded rows visibly inert in dumps/plots.
 PARK = -1.0e6
 
+# legacy alias (callers imported the chunker from here before keys.py)
+_pow2_chunks = pow2_chunks
 
-def pow2_bucket(n: int, floor: int = 128) -> int:
-    """Smallest power-of-two >= max(n, floor).
-
-    THE shape-bucket function: both the plan-cache key and the request
-    padding go through it, so they can never disagree (this replaces the
-    old ``ReadabilityServer._bucket`` whose result nothing consumed).
-    """
-    b = int(floor)
-    n = int(n)
-    while b < n:
-        b *= 2
-    return b
-
-
-def topology_hash(edges: np.ndarray, n_vertices: int) -> str:
-    """Stable digest of an edge topology (vertex count + edge list)."""
-    h = hashlib.blake2b(digest_size=12)
-    h.update(np.int64(n_vertices).tobytes())
-    h.update(np.ascontiguousarray(edges, np.int32).tobytes())
-    return h.hexdigest()
+# EvalSession kwargs that are serving *policy*, not evaluation semantics
+# (they do not belong in EvalConfig and are not deprecated)
+_SESSION_KNOBS = ("cache_size", "vertex_floor", "edge_floor", "max_coalesce")
 
 
 class PlanCache:
     """LRU cache of ReadabilityPlans.
 
-    Keys are ``(topology hash, vertex bucket, edge bucket, metric
-    configuration)`` tuples; values are hashable frozen plans, which the
-    jitted evaluators take as static arguments — a cache hit therefore
-    implies a jit cache hit for any request shape already traced.
+    Keys are ``(topology hash, vertex bucket, edge bucket, EvalConfig)``
+    tuples — the config rides along whole (it is frozen and hashable),
+    so *every* evaluation knob is part of the key by construction;
+    values are hashable frozen plans, which the jitted evaluators take
+    as static arguments — a cache hit therefore implies a jit cache hit
+    for any request shape already traced.
     """
 
     def __init__(self, capacity: int = 128):
@@ -104,36 +110,35 @@ class PlanCache:
             self.evictions += 1
 
 
-def _pow2_chunks(items, max_chunk: int):
-    """Split ``items`` into descending power-of-two-sized chunks so the
-    batched evaluator only ever sees O(log B) distinct batch dims (each a
-    one-time trace) instead of one trace per group size."""
-    out = []
-    i = 0
-    while i < len(items):
-        size = 1
-        while size * 2 <= min(len(items) - i, max_chunk):
-            size *= 2
-        out.append(items[i:i + size])
-        i += size
-    return out
-
-
 class EvalSession:
-    """Plan-caching, shape-bucketing, request-coalescing evaluator."""
+    """Plan-caching, shape-bucketing, request-coalescing evaluator.
 
-    def __init__(self, *, radius: float = 0.5, n_strips: int = 64,
-                 orientation: str = "both", metrics=engine.ALL_METRICS,
-                 ideal_angle=None, use_kernels: bool = False,
-                 cache_size: int = 128, vertex_floor: int = 128,
-                 edge_floor: int = 128, max_coalesce: int = 32):
-        self.radius = float(radius)
-        self.n_strips = int(n_strips)
-        self.orientation = orientation
-        self.metrics = tuple(metrics)
-        self.ideal = float(engine.DEFAULT_IDEAL if ideal_angle is None
-                           else ideal_angle)
-        self.use_kernels = bool(use_kernels)
+    ``EvalSession(config)`` is the canonical constructor; the keyword
+    knobs are serving policy (cache sizing, padding floors, coalescing
+    width).  The old per-knob evaluation kwargs (``radius=``,
+    ``n_strips=``, ...) are accepted as a deprecation shim and mapped
+    onto an :class:`~repro.core.keys.EvalConfig`.
+    """
+
+    def __init__(self, config: EvalConfig = None, *, cache_size: int = 128,
+                 vertex_floor: int = 128, edge_floor: int = 128,
+                 max_coalesce: int = 32, **legacy_kwargs):
+        if legacy_kwargs:
+            if config is not None:
+                raise TypeError("pass either an EvalConfig or legacy "
+                                f"kwargs, not both: {sorted(legacy_kwargs)}")
+            warn_once(
+                "EvalSession kwargs",
+                "EvalSession(radius=..., n_strips=..., ...) is deprecated: "
+                "pass EvalSession(EvalConfig(...)) — the config is the one "
+                "source of truth shared with the engine and the plan cache")
+            config = EvalConfig.from_legacy(**legacy_kwargs)
+        self.config = config if config is not None else EvalConfig()
+        if self.config.backend not in ("fused", "kernels"):
+            raise ValueError(
+                "EvalSession serves the jitted engine; backend must be "
+                f"'fused' or 'kernels', got {self.config.backend!r} "
+                "(use repro.api.Evaluator for the other backends)")
         self.vertex_floor = int(vertex_floor)
         self.edge_floor = int(edge_floor)
         self.max_coalesce = int(max_coalesce)
@@ -167,8 +172,7 @@ class EvalSession:
         pos_p[:n_v] = pos
         edges_p = np.zeros((eb, 2), np.int32)
         edges_p[:n_e] = edges
-        key = (topology_hash(edges, n_v), vb, eb, self.metrics,
-               self.n_strips, self.orientation, self.radius, self.ideal)
+        key = (topology_hash(edges, n_v), vb, eb, self.config)
         return key, dict(index=index, pos=pos, edges=edges, pos_p=pos_p,
                          edges_p=edges_p, n_v=n_v, n_e=n_e)
 
@@ -176,42 +180,35 @@ class EvalSession:
         plan = self.plans.get(key)
         if plan is not None:
             return plan
-        # tier_strips=False: serving plans use the flat strip capacity.
-        # A cached plan serves a *stream* of same-topology layouts whose
-        # occupancy drifts between strips; the flat cap's uniform
-        # headroom absorbs that drift where tight per-strip tiers would
-        # trip overflow -> replan -> retrace mid-steady-state.  The
-        # zero-replan/zero-retrace counters are the serving contract;
-        # the tiered sweep stays on for the layout-optimization batch
-        # path, which plans from the whole candidate batch at once.
+        # tier_default=False: serving plans use the flat strip capacity
+        # unless the config says otherwise (see the module docstring)
         plan = engine.plan_readability(
-            member["pos"], member["edges"], radius=self.radius,
-            ideal_angle=self.ideal, n_strips=self.n_strips,
-            orientation=self.orientation, metrics=self.metrics,
-            tier_strips=False)
+            member["pos"], member["edges"],
+            **self.config.plan_kwargs(tier_default=False))
         self.plans.put(key, plan)
         return plan
 
     # -- dispatch -----------------------------------------------------------
 
     def _dispatch(self, plan, chunk):
-        """One engine dispatch for a same-key chunk -> list of reports."""
+        """One engine dispatch for a same-key chunk -> list of scores."""
         t0 = engine.trace_count()
         self._stats["dispatches"] += 1
         n_v = np.int32(chunk[0]["n_v"])
         n_e = np.int32(chunk[0]["n_e"])
+        use_kernels = self.config.use_kernels
         if len(chunk) == 1:
             res = engine.evaluate_planned(
                 plan, chunk[0]["pos_p"], chunk[0]["edges_p"], n_v, n_e,
-                use_kernels=self.use_kernels)
-            reports = [report_from_result(res)]
+                use_kernels=use_kernels)
+            reports = [scores_from_result(res, int(n_v), int(n_e))]
         else:
             self._stats["coalesced"] += len(chunk)
             batch = np.stack([c["pos_p"] for c in chunk])
             res = engine.evaluate_layouts(
                 plan, batch, chunk[0]["edges_p"], n_v, n_e,
-                use_kernels=self.use_kernels)
-            reports = reports_from_batch(res)
+                use_kernels=use_kernels)
+            reports = scores_from_batch(res, int(n_v), int(n_e))
         self._stats["traces"] += engine.trace_count() - t0
         return reports
 
@@ -235,12 +232,12 @@ class EvalSession:
     # -- public API ---------------------------------------------------------
 
     def evaluate(self, pos, edges):
-        """One request -> one :class:`ReadabilityReport`."""
+        """One request -> one :class:`ReadabilityScores`."""
         return self.evaluate_batch([(pos, edges)])[0]
 
     def evaluate_batch(self, requests):
         """Evaluate ``[(pos, edges), ...]``; same-topology same-bucket
-        requests coalesce into single batched dispatches.  Returns reports
+        requests coalesce into single batched dispatches.  Returns scores
         in request order."""
         groups: OrderedDict = OrderedDict()
         for i, (pos, edges) in enumerate(requests):
@@ -250,6 +247,6 @@ class EvalSession:
         out = [None] * len(requests)
         for key, members in groups.items():
             plan = self._plan_for(key, members[0])
-            for chunk in _pow2_chunks(members, self.max_coalesce):
+            for chunk in pow2_chunks(members, self.max_coalesce):
                 plan = self._run_chunk(key, plan, chunk, out)
         return out

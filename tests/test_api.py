@@ -1,0 +1,381 @@
+"""The repro.api front door: config canonicalization and process-stable
+digests, metric-subset parity with counter-proof pruned tracing, the
+typed ReadabilityScores views, deprecation-shim equivalence
+(warn-exactly-once, asserted under DeprecationWarning-as-error), and the
+config-driven distributed front.
+
+This module runs with DeprecationWarning escalated to an error (see
+pytest.ini): any un-asserted warning — a shim warning twice, or the new
+surface warning at all — fails the test outright.
+"""
+
+import os
+import subprocess
+import sys
+
+import jax
+import numpy as np
+import pytest
+
+from repro import api
+from repro.api import EvalConfig, Evaluator, evaluate_exact, evaluator_for
+from repro.core import engine
+from repro.core import grid as gridlib
+from repro.core.keys import reset_deprecation_warnings
+from repro.core.metrics import evaluate_layout
+from repro.core.scores import ReadabilityScores
+from repro.launch.serve import ReadabilityServer
+from repro.launch.session import EvalSession
+
+pytestmark = pytest.mark.filterwarnings("error::DeprecationWarning")
+
+RADIUS = 2.0
+N_STRIPS = 64
+
+ALL = engine.ALL_METRICS
+
+
+def random_graph(n_v, n_e, seed=0):
+    rng = np.random.default_rng(seed)
+    pos = rng.uniform(0, 100, size=(n_v, 2)).astype(np.float32)
+    edges = set()
+    while len(edges) < n_e:
+        v, u = rng.integers(0, n_v, 2)
+        if v != u:
+            edges.add((min(v, u), max(v, u)))
+    return pos, np.array(sorted(edges), np.int32)
+
+
+@pytest.fixture(scope="module")
+def graph():
+    return random_graph(220, 440, seed=11)
+
+
+@pytest.fixture(scope="module")
+def full_scores(graph):
+    pos, edges = graph
+    return Evaluator(EvalConfig(radius=RADIUS, n_strips=N_STRIPS)) \
+        .evaluate(pos, edges)
+
+
+# ---------------------------------------------------------------------------
+# EvalConfig: canonical, hashable, process-stable
+# ---------------------------------------------------------------------------
+
+def test_config_canonicalization_and_hashing():
+    a = EvalConfig(metrics=("edge_crossing", "node_occlusion"), radius=1)
+    b = EvalConfig(metrics=("node_occlusion", "edge_crossing"), radius=1.0)
+    # metric order and numeric spelling don't matter: same config
+    assert a == b and hash(a) == hash(b) and a.digest() == b.digest()
+    assert a.metrics == ("node_occlusion", "edge_crossing")  # ALL order
+    assert isinstance(a.radius, float)
+    c = EvalConfig(metrics=("edge_crossing",))
+    assert c != a and c.digest() != a.digest()
+    # the config is usable as a dict key (the plan cache relies on it)
+    assert {a: 1, c: 2}[b] == 1
+
+
+def test_config_validation():
+    with pytest.raises(ValueError):
+        EvalConfig(metrics=("node_occlusion", "bogus"))
+    with pytest.raises(ValueError):
+        EvalConfig(metrics=())
+    with pytest.raises(ValueError):
+        EvalConfig(backend="spark")
+    with pytest.raises(ValueError):
+        EvalConfig(orientation="diagonal")
+    with pytest.raises(ValueError):
+        EvalConfig(precision="float16")
+
+
+def test_config_digest_stable_across_processes():
+    """hash() of a dataclass with str fields is salted per process
+    (PYTHONHASHSEED); EvalConfig.digest() must not be."""
+    cfg = EvalConfig(radius=RADIUS, n_strips=N_STRIPS,
+                     metrics=("edge_crossing", "minimum_angle"))
+    prog = ("from repro.core.keys import EvalConfig; "
+            "print(EvalConfig(radius=%r, n_strips=%r, "
+            "metrics=('edge_crossing', 'minimum_angle')).digest())"
+            % (RADIUS, N_STRIPS))
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    env["PYTHONHASHSEED"] = "12345"   # force a different str-hash salt
+    out = subprocess.run([sys.executable, "-c", prog], env=env,
+                         capture_output=True, text=True, timeout=120)
+    assert out.returncode == 0, out.stderr
+    assert out.stdout.strip() == cfg.digest()
+
+
+# ---------------------------------------------------------------------------
+# metric subsets: value parity + counter-proof pruned tracing
+# ---------------------------------------------------------------------------
+
+def test_subset_values_match_full_run(graph, full_scores):
+    """Each metric under a subset config equals the all-metrics run:
+    integer metrics bit-identical, E_ca (and other floats) to 1e-6."""
+    pos, edges = graph
+    for metric in ALL:
+        got = Evaluator(EvalConfig(radius=RADIUS, n_strips=N_STRIPS,
+                                   metrics=(metric,))).evaluate(pos, edges)
+        want = getattr(full_scores, metric)
+        if metric in ("node_occlusion", "edge_crossing"):
+            assert getattr(got, metric) == want, metric
+        else:
+            np.testing.assert_allclose(getattr(got, metric), want,
+                                       rtol=1e-6, err_msg=metric)
+        # everything not asked for is absent, not zero
+        for other in ALL:
+            if other != metric:
+                assert getattr(got, other) is None
+
+
+def test_crossing_only_builds_zero_cell_buckets(graph):
+    """metrics=("edge_crossing",) must skip cell bucketing AND the
+    vertex-key sort at trace level (the acceptance criterion's first
+    half), while still running the strip sweeps."""
+    pos, edges = graph
+    ev = Evaluator(EvalConfig(radius=RADIUS, n_strips=56,
+                              metrics=("edge_crossing",)))
+    gridlib.reset_call_counts()
+    scores = ev.evaluate(pos, edges)
+    assert scores.edge_crossing is not None
+    assert gridlib.CALL_COUNTS["cell_builds"] == 0
+    assert gridlib.CALL_COUNTS["vertex_sorts"] == 0
+    assert gridlib.CALL_COUNTS["strip_builds"] == 2      # both orientations
+    assert gridlib.CALL_COUNTS["reversal_sweeps"] == 2
+    # ... and the cheap plan proves it too: no occlusion grid was planned
+    plan = ev.plan(pos, edges)
+    assert (plan.grid_nx, plan.grid_ny) == (1, 1)
+
+
+def test_occlusion_only_runs_zero_sweeps(graph):
+    """metrics=("node_occlusion",) must skip strip building, reversal
+    sweeps, and the vertex-key sort (the criterion's second half)."""
+    pos, edges = graph
+    ev = Evaluator(EvalConfig(radius=RADIUS, n_strips=56,
+                              metrics=("node_occlusion",)))
+    gridlib.reset_call_counts()
+    scores = ev.evaluate(pos, edges)
+    assert scores.node_occlusion is not None
+    assert gridlib.CALL_COUNTS["reversal_sweeps"] == 0
+    assert gridlib.CALL_COUNTS["strip_builds"] == 0
+    assert gridlib.CALL_COUNTS["vertex_sorts"] == 0
+    assert gridlib.CALL_COUNTS["cell_builds"] == 1
+    plan = ev.plan(pos, edges)
+    assert plan.strip_plans == ()
+
+
+def test_no_minimum_angle_skips_vertex_sort(graph):
+    pos, edges = graph
+    cfg = EvalConfig(radius=RADIUS, n_strips=56,
+                     metrics=tuple(m for m in ALL if m != "minimum_angle"))
+    gridlib.reset_call_counts()
+    Evaluator(cfg).evaluate(pos, edges)
+    assert gridlib.CALL_COUNTS["vertex_sorts"] == 0
+    assert gridlib.CALL_COUNTS["cell_builds"] == 1
+
+
+def test_batched_subsets_prune_too(graph):
+    """The natively batched program prunes the same decompositions."""
+    pos, edges = graph
+    rng = np.random.default_rng(0)
+    batch = np.stack([pos + rng.normal(0, 1.0, pos.shape).astype(np.float32)
+                      for _ in range(3)])
+    ev = Evaluator(EvalConfig(radius=RADIUS, n_strips=56,
+                              metrics=("edge_crossing",)))
+    plan = ev.plan(batch, edges)
+    gridlib.reset_call_counts()
+    got = ev.evaluate_batch(batch, edges, plan=plan)
+    assert gridlib.CALL_COUNTS["cell_builds"] == 0
+    assert gridlib.CALL_COUNTS["vertex_sorts"] == 0
+    assert got.batch_size == 3
+    full = Evaluator(EvalConfig(radius=RADIUS, n_strips=56))
+    want = full.evaluate_batch(batch, edges)
+    np.testing.assert_array_equal(np.asarray(got.edge_crossing),
+                                  np.asarray(want.edge_crossing))
+
+
+# ---------------------------------------------------------------------------
+# ReadabilityScores views
+# ---------------------------------------------------------------------------
+
+def test_scores_normalized_and_sizes(graph, full_scores):
+    pos, edges = graph
+    s = full_scores
+    assert (s.n_vertices, s.n_edges) == (pos.shape[0], edges.shape[0])
+    norm = s.normalized()
+    for name in ("node_occlusion", "minimum_angle", "edge_length_variation",
+                 "edge_crossing", "edge_crossing_angle"):
+        v = getattr(norm, name)
+        assert 0.0 <= v <= 1.0, name
+    # counts map through their pair budgets
+    v = s.n_vertices
+    want = 1.0 - s.node_occlusion / (v * (v - 1) / 2)
+    np.testing.assert_allclose(norm.node_occlusion, want, rtol=1e-12)
+
+
+def test_scores_unbatch_roundtrip(graph):
+    pos, edges = graph
+    rng = np.random.default_rng(5)
+    batch = np.stack([pos + rng.normal(0, 1.0, pos.shape).astype(np.float32)
+                      for _ in range(4)])
+    ev = Evaluator(EvalConfig(radius=RADIUS, n_strips=N_STRIPS))
+    plan = ev.plan(batch, edges)
+    scores = ev.evaluate_batch(batch, edges, plan=plan)
+    singles = scores.unbatch()
+    assert len(singles) == 4
+    for i, s in enumerate(singles):
+        ref = engine.evaluate_planned(plan, batch[i], edges)
+        assert s.edge_crossing == int(ref.edge_crossing)
+        assert s.node_occlusion == int(ref.node_occlusion)
+        assert s.batch_size is None
+        # per-item normalized view works (sizes propagated)
+        assert 0.0 <= s.normalized().edge_crossing <= 1.0
+    # batched normalized view stays batched
+    assert scores.normalized().node_occlusion.shape == (4,)
+
+
+# ---------------------------------------------------------------------------
+# deprecation shims: equivalent results, warn exactly once
+# ---------------------------------------------------------------------------
+
+def test_evaluate_layout_shim_warns_once_and_matches(graph):
+    pos, edges = graph
+    cfg = EvalConfig(radius=RADIUS, n_strips=N_STRIPS)
+    want = evaluator_for(cfg).evaluate(pos, edges)
+    reset_deprecation_warnings()
+    with pytest.warns(DeprecationWarning, match="evaluate_layout"):
+        got = evaluate_layout(pos, edges, radius=RADIUS, n_strips=N_STRIPS)
+    # same config -> same cached evaluator -> bit-identical scores
+    assert got == want
+    # second call must NOT warn: DeprecationWarning is an error in this
+    # module, so a repeat warning would raise right here
+    again = evaluate_layout(pos, edges, radius=RADIUS, n_strips=N_STRIPS)
+    assert again == want
+
+
+def test_evaluate_layout_exact_shim(graph):
+    pos, edges = graph
+    reset_deprecation_warnings()
+    with pytest.warns(DeprecationWarning):
+        got = evaluate_layout(pos, edges, radius=RADIUS, method="exact")
+    want = evaluate_exact(pos, edges, config=EvalConfig(radius=RADIUS))
+    assert got == want
+    assert got.node_occlusion == want.node_occlusion
+
+
+def test_session_kwarg_shim(graph):
+    pos, edges = graph
+    reset_deprecation_warnings()
+    with pytest.warns(DeprecationWarning, match="EvalSession"):
+        legacy = EvalSession(radius=RADIUS, n_strips=N_STRIPS)
+    modern = EvalSession(EvalConfig(radius=RADIUS, n_strips=N_STRIPS))
+    assert legacy.config == modern.config
+    # the modern constructor must not warn (it would raise here)
+    a = legacy.evaluate(pos, edges)
+    b = modern.evaluate(pos, edges)
+    assert a.edge_crossing == b.edge_crossing
+    assert a.node_occlusion == b.node_occlusion
+    # both ride the SAME plan-cache key shape: (topo, vb, eb, config)
+    (key,) = legacy.plans._entries.keys()
+    assert key[-1] == legacy.config
+    with pytest.raises(TypeError):
+        EvalSession(EvalConfig(), radius=1.0)
+    with pytest.raises(ValueError):
+        EvalSession(EvalConfig(backend="eager"))
+
+
+def test_server_method_shim(graph):
+    pos, edges = graph
+    reset_deprecation_warnings()
+    with pytest.warns(DeprecationWarning, match="ReadabilityServer"):
+        legacy = ReadabilityServer(method="enhanced", n_strips=N_STRIPS,
+                                   radius=RADIUS)
+    modern = ReadabilityServer(EvalConfig(radius=RADIUS, n_strips=N_STRIPS))
+    got = legacy.evaluate(pos, edges)
+    want = modern.evaluate(pos, edges)
+    assert got.edge_crossing == want.edge_crossing
+    assert got.node_occlusion == want.node_occlusion
+    assert legacy.config.backend == "eager"
+    assert "plan_hits" not in legacy.stats        # eager fallback
+    assert "plan_hits" in modern.stats            # session path
+    # the legacy enhanced+use_kernels combination must keep its Pallas
+    # routing (counts are kernel/jnp-identical, so equality proves the
+    # path ran, and a dropped flag can never regress silently again)
+    reset_deprecation_warnings()
+    with pytest.warns(DeprecationWarning):
+        kern = ReadabilityServer(method="enhanced", n_strips=N_STRIPS,
+                                 radius=RADIUS, use_kernels=True)
+    k = kern.evaluate(pos, edges)
+    assert k.edge_crossing == want.edge_crossing
+    assert k.node_occlusion == want.node_occlusion
+    # config-driven construction and plain defaults never warn (errors
+    # in this module if they did)
+    ReadabilityServer()
+    ReadabilityServer(EvalConfig(backend="eager"))
+
+
+# ---------------------------------------------------------------------------
+# evaluator caching + the distributed front
+# ---------------------------------------------------------------------------
+
+def test_evaluator_for_reuses_plans_and_traces(graph):
+    """Repeated shim-equivalent configs share ONE evaluator; repeat
+    traffic is plan-cache hits with zero new traces (what the old
+    re-plan-per-call wrapper could never do)."""
+    pos, edges = graph
+    cfg = EvalConfig(radius=RADIUS, n_strips=N_STRIPS)
+    ev = evaluator_for(cfg)
+    assert evaluator_for(EvalConfig(radius=2.0, n_strips=64)) is ev
+    ev.evaluate(pos, edges)                        # warm (plan + trace)
+    stats0 = ev._bound_session().stats
+    traces0 = engine.trace_count()
+    builds0 = dict(gridlib.CALL_COUNTS)
+    ev.evaluate(pos + 1.0, edges)                  # same topology+bucket
+    stats1 = ev._bound_session().stats
+    assert stats1["plan_hits"] == stats0["plan_hits"] + 1
+    assert stats1["plan_misses"] == stats0["plan_misses"]
+    assert engine.trace_count() == traces0         # no retrace
+    assert gridlib.CALL_COUNTS == builds0          # no rebuilds at all
+
+
+def test_distributed_backend_matches_fused(graph):
+    pos, edges = graph
+    fused = Evaluator(EvalConfig(radius=RADIUS, n_strips=N_STRIPS)) \
+        .evaluate(pos, edges)
+    dist = Evaluator(EvalConfig(radius=RADIUS, n_strips=N_STRIPS,
+                                backend="distributed")).evaluate(pos, edges)
+    assert dist.node_occlusion == fused.node_occlusion
+    assert dist.edge_crossing == fused.edge_crossing
+    np.testing.assert_allclose(dist.edge_crossing_angle,
+                               fused.edge_crossing_angle, rtol=1e-5)
+    np.testing.assert_allclose(dist.minimum_angle, fused.minimum_angle,
+                               rtol=1e-5)
+
+
+def test_eager_backend_matches_fused(graph):
+    """backend='eager' (plan per call, no jit) agrees with the fused
+    session path: integers exactly, floats to rounding."""
+    pos, edges = graph
+    fused = Evaluator(EvalConfig(radius=RADIUS, n_strips=N_STRIPS)) \
+        .evaluate(pos, edges)
+    eager = Evaluator(EvalConfig(radius=RADIUS, n_strips=N_STRIPS,
+                                 backend="eager")).evaluate(pos, edges)
+    assert eager.node_occlusion == fused.node_occlusion
+    assert eager.edge_crossing == fused.edge_crossing
+    np.testing.assert_allclose(eager.edge_crossing_angle,
+                               fused.edge_crossing_angle, rtol=1e-5)
+
+
+def test_api_surface_is_warning_free(graph):
+    """The whole new surface under DeprecationWarning-as-error: config,
+    evaluator, batch, session, server, exact."""
+    pos, edges = graph
+    cfg = EvalConfig(radius=RADIUS, n_strips=N_STRIPS)
+    ev = Evaluator(cfg)
+    ev.evaluate(pos, edges)
+    ev.session().evaluate(pos, edges)
+    evaluate_exact(pos, edges, config=cfg)
+    ReadabilityServer(cfg).evaluate_batch([(pos, edges)])
+    assert isinstance(api.ALL_METRICS, tuple)
+    assert isinstance(ev.evaluate(pos, edges), ReadabilityScores)

@@ -174,7 +174,8 @@ def test_batched_work_shape():
     plan = plan_readability(batch, edges, radius=RADIUS, n_strips=48)
     gridlib.reset_call_counts()
     jax.block_until_ready(evaluate_layouts(plan, batch, edges))
-    assert gridlib.CALL_COUNTS == {"strip_builds": 2, "reversal_sweeps": 2}
+    assert gridlib.CALL_COUNTS == {"strip_builds": 2, "reversal_sweeps": 2,
+                                   "cell_builds": 1, "vertex_sorts": 1}
 
 
 def test_gather_ragged_matches_dense_on_uniform_caps():

@@ -135,30 +135,36 @@ def test_engine_bitwise_matches_unfused(graph, orientation):
     assert int(res.node_occlusion) == int(count_occlusions_exact(pos, RADIUS))
 
 
-def test_evaluate_layout_wrapper_matches_old_eager_path(graph):
-    """The compatibility wrapper runs the fused program eagerly, so it
-    must be bit-identical to the old eager per-metric evaluate_layout
-    body (eager-vs-eager; the jitted engine is compared jit-vs-jit
-    above)."""
+def test_evaluate_layout_wrapper_matches_engine(graph):
+    """The deprecated wrapper now routes through the cached config-keyed
+    Evaluator (plan-cache + padded jitted engine), so it must reproduce
+    the jitted engine under an equivalent flat plan: integer metrics
+    bit-identical (the padding contract), floats to rounding
+    (jit-vs-jit; the old eager-vs-eager comparison died with the
+    per-call re-planning this shim no longer does)."""
     pos, edges = graph
     rep = evaluate_layout(pos, edges, radius=RADIUS, method="enhanced",
                           n_strips=N_STRIPS)
-    occ, occ_ov = count_occlusions_enhanced(pos, RADIUS)
-    m_a, _ = minimum_angle(pos, edges)
-    m_l = edge_length_variation(pos, edges)
-    e_c, ec_ov = count_crossings_enhanced(pos, edges, n_strips=N_STRIPS)
-    e_ca, cnt, _, _ = crossing_angle_enhanced(pos, edges,
-                                              n_strips=N_STRIPS)
-    assert rep.node_occlusion == int(occ)
-    assert rep.minimum_angle == float(m_a)
-    assert rep.edge_length_variation == float(m_l)
-    assert rep.edge_crossing == int(e_c)
-    # tiered sweep: E_ca deviation summed in tier order, not strip order
-    np.testing.assert_allclose(rep.edge_crossing_angle, float(e_ca),
+    plan = plan_readability(pos, edges, radius=RADIUS, n_strips=N_STRIPS,
+                            tier_strips=False)
+    want = evaluate_planned(plan, pos, edges)
+    assert rep.node_occlusion == int(want.node_occlusion)
+    assert rep.edge_crossing == int(want.edge_crossing)
+    assert rep.crossing_count_for_angle == int(want.crossing_count_for_angle)
+    assert rep.overflow == int(want.overflow) == 0
+    np.testing.assert_allclose(rep.minimum_angle, float(want.minimum_angle),
                                rtol=1e-6)
-    assert rep.crossing_count_for_angle == int(cnt)
-    # shared strip decomposition: dropped segments count once
-    assert rep.overflow == int(occ_ov) + int(ec_ov)
+    np.testing.assert_allclose(rep.edge_length_variation,
+                               float(want.edge_length_variation), rtol=1e-6)
+    np.testing.assert_allclose(rep.edge_crossing_angle,
+                               float(want.edge_crossing_angle), rtol=1e-6)
+    # the scores carry the natural sizes for the normalized view
+    assert (rep.n_vertices, rep.n_edges) == (pos.shape[0], edges.shape[0])
+    # second call on the same topology: served from the cached plan,
+    # bit-identical
+    again = evaluate_layout(pos, edges, radius=RADIUS, method="enhanced",
+                            n_strips=N_STRIPS)
+    assert again == rep
 
 
 def test_batched_matches_looped(graph):
@@ -209,12 +215,14 @@ def test_fused_sweep_counts():
                              orientation="both")
     crossing_angle_enhanced(pos, edges, n_strips=N_STRIPS,
                             orientation="both")
-    assert gridlib.CALL_COUNTS == {"strip_builds": 4, "reversal_sweeps": 4}
+    assert gridlib.CALL_COUNTS == {"strip_builds": 4, "reversal_sweeps": 4,
+                                   "cell_builds": 0, "vertex_sorts": 0}
 
     plan = plan_readability(pos, edges, radius=RADIUS, n_strips=48)
     gridlib.reset_call_counts()
     jax.block_until_ready(evaluate_planned(plan, pos, edges))
-    assert gridlib.CALL_COUNTS == {"strip_builds": 2, "reversal_sweeps": 2}
+    assert gridlib.CALL_COUNTS == {"strip_builds": 2, "reversal_sweeps": 2,
+                                   "cell_builds": 1, "vertex_sorts": 1}
 
 
 def test_use_kernels_parity():
