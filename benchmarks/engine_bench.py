@@ -21,10 +21,21 @@ Times, at |V| in {1k, 10k} (CPU-friendly sizes; same code path on TPU):
     grid.CALL_COUNTS) and timed (each subset must beat the all-metrics
     program).
 
+  * **mesh-sharded batched** (|V|=1k, B=32, 4 forced host devices, in a
+    clean subprocess so the forced-device view cannot perturb the
+    single-host timings): ``repro.distributed.batched``'s batch-axis
+    sharding vs a per-layout ``evaluate_sharded`` loop (>= 1.5x gate,
+    plus bit-identical integer parity with the single-host batched
+    program) — the ``sharded_batched`` record.
+
 ``--config '{"n_strips": 128, ...}'`` overrides the base EvalConfig.
-``--smoke`` runs only the subset-pruning section (no file write; exits
-nonzero if a pruned decomposition was built) — CI uses it so
-metric-subset pruning regressions fail fast.
+``--smoke`` runs only the subset-pruning sections (single-host AND
+sharded-batched; no file write; exits nonzero if a pruned decomposition
+was built) — CI uses it so metric-subset pruning regressions fail fast.
+``--devices N`` forces N host devices
+(``XLA_FLAGS=--xla_force_host_platform_device_count``) before jax
+initializes; ``--sharded-only`` prints just the sharded-batched record
+(the subprocess leg of the full run).
 
 Writes BENCH_engine.json next to this file (the perf trajectory record).
 
@@ -37,8 +48,32 @@ import argparse
 import dataclasses
 import json
 import os
+import subprocess
 import sys
 import time
+
+
+def _apply_devices_flag():
+    """``--devices N`` must act before jax initializes: it maps onto the
+    same ``XLA_FLAGS=--xla_force_host_platform_device_count`` forcing the
+    distributed tests use (N fake host devices on CPU).  Handles both
+    ``--devices N`` and ``--devices=N`` (argparse accepts both, so the
+    pre-import scan must too)."""
+    n = None
+    for i, arg in enumerate(sys.argv):
+        if arg == "--devices":
+            if i + 1 >= len(sys.argv):
+                sys.exit("--devices needs a value")
+            n = int(sys.argv[i + 1])
+        elif arg.startswith("--devices="):
+            n = int(arg.split("=", 1)[1])
+    if n is not None and n > 1:
+        os.environ["XLA_FLAGS"] = (
+            os.environ.get("XLA_FLAGS", "")
+            + f" --xla_force_host_platform_device_count={n}").strip()
+
+
+_apply_devices_flag()
 
 import jax
 import jax.numpy as jnp
@@ -194,6 +229,107 @@ def bench_size(n_v, n_strips, *, batch=True):
     return rec
 
 
+def bench_sharded_batched(base: EvalConfig, n_v: int = 1000,
+                          batch: int = BATCH, repeats: int = 2):
+    """Mesh-sharded batched evaluation vs per-layout ``evaluate_sharded``
+    looping — the composition the ISSUE-5 acceptance gate times.
+
+    The loop baseline is what a mesh caller had before the batched
+    driver: one strip-sharded dispatch chain per candidate (fresh plan,
+    per-metric host syncs) — measured on a few candidates and
+    extrapolated like the unfused loop baseline.  The sharded-batched
+    path shards the batch axis of ONE natively batched dispatch over
+    the same mesh; integer parity with the single-host batched program
+    is asserted as part of the record.
+    """
+    from repro.distributed.batched import evaluate_layouts_sharded
+    from repro.distributed.compat import make_mesh
+    from repro.distributed.gridded import evaluate_sharded
+
+    pos, edges = make_graph(n_v)
+    cfg = dataclasses.replace(base, backend="distributed")
+    rng = np.random.default_rng(1)
+    sigma = 0.3 * 100.0 / np.sqrt(n_v)
+    b = np.stack([np.asarray(pos) +
+                  rng.normal(0, sigma, size=pos.shape).astype(np.float32)
+                  for _ in range(batch)])
+    ndev = len(jax.devices())
+    mesh = make_mesh((ndev,), ("batch",))
+    plan = plan_readability(b, edges, **cfg.plan_kwargs())
+    bj = jnp.asarray(b)
+
+    jax.block_until_ready(
+        evaluate_layouts_sharded(mesh, plan, bj, edges))     # warm
+    jax.block_until_ready(evaluate_layouts(plan, bj, edges))  # warm
+
+    # per-layout sharded loop (each call re-plans and rebuilds its
+    # shard_map dispatches — the pre-composition cost, honestly timed)
+    k = min(4, batch)
+    t0 = time.perf_counter()
+    for i in range(k):
+        evaluate_sharded(mesh, bj[i], edges, config=cfg)
+    t_loop = (time.perf_counter() - t0) * (batch / k)
+
+    t_shard, _ = timed(lambda: jax.device_get(
+        evaluate_layouts_sharded(mesh, plan, bj, edges)), repeats=repeats)
+    t_host, _ = timed(lambda: jax.device_get(
+        evaluate_layouts(plan, bj, edges)), repeats=repeats)
+
+    got = jax.device_get(evaluate_layouts_sharded(mesh, plan, bj, edges))
+    want = jax.device_get(evaluate_layouts(plan, bj, edges))
+    int_parity = (
+        np.array_equal(np.asarray(got.edge_crossing),
+                       np.asarray(want.edge_crossing))
+        and np.array_equal(np.asarray(got.node_occlusion),
+                           np.asarray(want.node_occlusion))
+        and np.array_equal(np.asarray(got.overflow),
+                           np.asarray(want.overflow)))
+
+    return {"devices": ndev, "batch_size": batch, "n_vertices": n_v,
+            "n_strips": cfg.n_strips,
+            "sharded_loop_seconds": t_loop,
+            "sharded_loop_measured_candidates": k,
+            "sharded_batched_seconds": t_shard,
+            "host_batched_seconds": t_host,
+            "speedup_vs_sharded_loop": t_loop / t_shard,
+            "int_parity_vs_host_batched": bool(int_parity)}
+
+
+def smoke_sharded_batched(base: EvalConfig, n_v: int = 300) -> bool:
+    """Counter tripwire for the sharded-batched route: metric-subset
+    pruning must survive the shard_map composition (a crossing-only
+    config traces zero cell builds, an occlusion-only config zero strip
+    builds/sweeps, *per shard body*)."""
+    from repro.distributed.batched import evaluate_layouts_sharded
+    from repro.distributed.compat import make_mesh
+
+    pos, edges = make_graph(n_v)
+    rng = np.random.default_rng(1)
+    b = jnp.asarray(np.stack(
+        [np.asarray(pos) + rng.normal(0, 0.2, size=pos.shape)
+         .astype(np.float32) for _ in range(4)]))
+    mesh = make_mesh((len(jax.devices()),), ("batch",))
+    ok = True
+    for name, metrics in SUBSETS.items():
+        if metrics is None:
+            continue
+        cfg = dataclasses.replace(base, metrics=metrics,
+                                  backend="distributed")
+        plan = plan_readability(b, edges, **cfg.plan_kwargs())
+        gridlib.reset_call_counts()
+        jax.block_until_ready(
+            evaluate_layouts_sharded(mesh, plan, b, edges))  # traces here
+        c = dict(gridlib.CALL_COUNTS)
+        if name == "crossing_only":
+            good = c["cell_builds"] == 0 and c["vertex_sorts"] == 0
+        else:
+            good = c["strip_builds"] == 0 and c["reversal_sweeps"] == 0
+        print(f"  sharded {name:14s}: counters {c}"
+              f"  {'ok' if good else 'PRUNING REGRESSED'}")
+        ok = ok and good
+    return ok
+
+
 def bench_metric_subsets(base: EvalConfig, n_v: int = 1000,
                          repeats: int = 5):
     """Per-subset timings + structural pruning proof at one size.
@@ -255,22 +391,40 @@ def main(argv=None):
     ap.add_argument("--smoke", action="store_true",
                     help="subset-pruning section only; no BENCH file; "
                          "nonzero exit if pruning regressed (CI gate)")
+    ap.add_argument("--devices", type=int, default=None,
+                    help="force N host devices (consumed before jax "
+                         "import; the sharded-batched sections then run "
+                         "on an N-device mesh)")
+    ap.add_argument("--sharded-only", action="store_true",
+                    help="run ONLY the sharded-batched section and print "
+                         "its record as JSON (used by the full bench to "
+                         "time the mesh on forced devices in a clean "
+                         "subprocess)")
     args = ap.parse_args(argv)
     base = EvalConfig(**{"n_strips": 128, **json.loads(args.config)})
+
+    if args.sharded_only:
+        rec = bench_sharded_batched(base, n_v=1000)
+        print("SHARDED_RESULT " + json.dumps(rec))
+        return
 
     if args.smoke:
         print("metric subsets (smoke) ...", flush=True)
         rec = bench_metric_subsets(base, n_v=1000, repeats=3)
         print_subsets(rec)
+        print("sharded-batched subsets (smoke) ...", flush=True)
+        sharded_ok = smoke_sharded_batched(base)
         # timing gates are advisory in smoke (shared CI runners are
         # noisy); the structural counter gates are the regression tripwire
         ok = (rec["pruning"]["crossing_only_zero_cell_builds"]
-              and rec["pruning"]["occlusion_only_zero_sweeps"])
+              and rec["pruning"]["occlusion_only_zero_sweeps"]
+              and sharded_ok)
         if not ok:
             print("SMOKE FAIL: a pruned config still built the "
                   "decomposition it should skip")
             sys.exit(1)
-        print("smoke ok: metric-subset pruning intact")
+        print("smoke ok: metric-subset pruning intact "
+              "(single-host and sharded-batched routes)")
         return
 
     results = {"backend": jax.default_backend(),
@@ -297,6 +451,32 @@ def main(argv=None):
     results["metric_subsets"] = subsets
     print_subsets(subsets)
 
+    # mesh-sharded batched section: timed in a clean subprocess so the
+    # forced 4-device host view cannot perturb the single-host timings
+    # above (historical comparability), while the mesh really has 4
+    # devices (the ISSUE-5 acceptance setup)
+    n_mesh = args.devices or 4
+    print(f"sharded batched @1k ({n_mesh} forced host devices) ...",
+          flush=True)
+    sub = subprocess.run(
+        [sys.executable, os.path.abspath(__file__), "--sharded-only",
+         "--devices", str(n_mesh), "--config", args.config],
+        capture_output=True, text=True, timeout=1800)
+    if sub.returncode != 0:
+        print(sub.stdout + "\n" + sub.stderr)
+        sys.exit(1)
+    line = [l for l in sub.stdout.splitlines()
+            if l.startswith("SHARDED_RESULT ")][-1]
+    sharded = json.loads(line[len("SHARDED_RESULT "):])
+    results["sharded_batched"] = sharded
+    print(f"  devices={sharded['devices']} B={sharded['batch_size']}: "
+          f"per-layout sharded loop "
+          f"{sharded['sharded_loop_seconds'] * 1e3:8.1f} ms  "
+          f"sharded batched "
+          f"{sharded['sharded_batched_seconds'] * 1e3:8.1f} ms  "
+          f"speedup {sharded['speedup_vs_sharded_loop']:.2f}x  "
+          f"int parity {sharded['int_parity_vs_host_batched']}")
+
     ok_shape = all(r["fused_strip_builds"] == 2
                    and r["fused_reversal_sweeps"] == 2
                    and r["unfused_strip_builds"] == 4
@@ -319,6 +499,13 @@ def main(argv=None):
             r["batched_speedup_vs_planned_loop"] >= 1.5
             for r in results["sizes"]
             if "batched_speedup_vs_planned_loop" in r),
+        # the ISSUE-5 gate: mesh-sharded batched must beat per-layout
+        # evaluate_sharded looping >= 1.5x at |V|=1k, with integer
+        # metrics bit-identical to the single-host batched program
+        "sharded_batched_speedup_ge_1.5x":
+            sharded["speedup_vs_sharded_loop"] >= 1.5,
+        "sharded_batched_int_parity":
+            sharded["int_parity_vs_host_batched"],
     }
     out = os.path.join(os.path.dirname(__file__), "..", "BENCH_engine.json")
     with open(os.path.abspath(out), "w") as f:

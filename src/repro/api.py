@@ -74,7 +74,11 @@ class Evaluator:
     * :meth:`evaluate_batch` — ``(B, V, 2)`` candidate layouts of ONE
       graph in one natively batched dispatch; returns a batched
       :class:`ReadabilityScores` (fields carry a leading ``B`` dim;
-      ``.unbatch()`` splits).  Pass ``plan=`` in hot loops.
+      ``.unbatch()`` splits).  Pass ``plan=`` in hot loops.  On
+      ``backend="distributed"`` the batch axis shards over the mesh
+      (:func:`repro.distributed.batched.evaluate_layouts_sharded`;
+      ``EvalConfig.shards`` bounds the device count) with integer
+      metrics bit-identical to the single-host batched program.
     * :meth:`session` — a fresh :class:`EvalSession` bound to the same
       config, for request streams that want the serving policy knobs.
     """
@@ -103,8 +107,13 @@ class Evaluator:
     # -- sessions -----------------------------------------------------------
 
     def session(self, **knobs) -> EvalSession:
-        """A fresh serving session bound to this config."""
-        return EvalSession(self.config, **{**self._session_knobs, **knobs})
+        """A fresh serving session bound to this config.
+
+        An :class:`Evaluator` constructed with a ``mesh`` hands it to the
+        session, which then shards coalesced batches over it (serving
+        scale-out; results stay bit-identical on integer metrics)."""
+        return EvalSession(self.config, **{"mesh": self.mesh,
+                                           **self._session_knobs, **knobs})
 
     def _bound_session(self) -> EvalSession:
         if self._session is None:
@@ -115,7 +124,11 @@ class Evaluator:
         if self.mesh is None:
             import jax
             from repro.distributed.compat import make_mesh
-            self.mesh = make_mesh((len(jax.devices()),), ("eval",))
+            devices = jax.devices()
+            n = len(devices)
+            if self.config.shards is not None:
+                n = min(self.config.shards, n)
+            self.mesh = make_mesh((n,), ("eval",), devices=devices[:n])
         return self.mesh
 
     # -- evaluation ---------------------------------------------------------
@@ -157,11 +170,19 @@ class Evaluator:
                              f"got shape {batch_pos.shape}")
         backend = self.config.backend
         if backend == "distributed":
-            from repro.distributed.gridded import evaluate_sharded
+            # mesh-sharded native batching: the batch axis shards over
+            # the device mesh, each shard running the engine's batched
+            # body — integer metrics bit-identical to the single-host
+            # evaluate_layouts program (see repro.distributed.batched)
+            from repro.distributed.batched import evaluate_layouts_sharded
             mesh = self._mesh()
-            per = [evaluate_sharded(mesh, p, edges, config=self.config)
-                   for p in batch_pos]
-            return _stack_scores(per, batch_pos.shape[1], edges.shape[0])
+            if plan is None:
+                plan = self.plan(batch_pos, edges)
+            import jax
+            res = jax.device_get(
+                evaluate_layouts_sharded(mesh, plan, batch_pos, edges))
+            return res._replace(n_vertices=int(batch_pos.shape[1]),
+                                n_edges=int(edges.shape[0]))
         if plan is None:
             plan = self.plan(batch_pos, edges)
         if backend == "eager":
@@ -174,22 +195,6 @@ class Evaluator:
         res = jax.device_get(res)
         return res._replace(n_vertices=int(batch_pos.shape[1]),
                             n_edges=int(edges.shape[0]))
-
-
-def _stack_scores(per, n_vertices, n_edges) -> ReadabilityScores:
-    """Stack per-layout host scores into one batched ReadabilityScores."""
-    import numpy as np
-
-    def col(name):
-        vals = [getattr(s, name) for s in per]
-        return None if vals[0] is None else np.asarray(vals)
-
-    fields = ("node_occlusion", "minimum_angle", "edge_length_variation",
-              "edge_crossing", "edge_crossing_angle",
-              "crossing_count_for_angle", "overflow")
-    return ReadabilityScores(n_vertices=int(n_vertices),
-                             n_edges=int(n_edges),
-                             **{f: col(f) for f in fields})
 
 
 # ---------------------------------------------------------------------------

@@ -569,9 +569,9 @@ def _evaluate_planned(plan, pos, edges, n_valid_vertices=None,
                      n_valid_vertices, n_valid_edges)
 
 
-def _evaluate_batched(plan: ReadabilityPlan, batch_pos, edges,
-                      n_valid_vertices=None,
-                      n_valid_edges=None) -> EngineResult:
+def evaluate_batched_body(plan: ReadabilityPlan, batch_pos, edges,
+                          n_valid_vertices=None,
+                          n_valid_edges=None) -> EngineResult:
     """The natively batched engine program: ``(B, V, 2)`` in one pass.
 
     No per-layout dispatch: each bucketing step groups the whole batch
@@ -582,6 +582,15 @@ def _evaluate_batched(plan: ReadabilityPlan, batch_pos, edges,
     bit-identical to looping
     :func:`_evaluate` over the batch members (same decompositions, same
     pair formulas, order-independent integer sums).
+
+    This function is the ONE source of truth for the batched program:
+    the single-host jit (:func:`evaluate_layouts`) traces it whole, and
+    the mesh-sharded driver
+    (:func:`repro.distributed.batched.evaluate_layouts_sharded`) traces
+    it per shard on the batch-axis slice — every per-layout value is
+    computed by per-layout-independent code (each bucketing sort is
+    per-row, each sweep reduction per-layout), which is what makes the
+    sharded composition bit-identical on integer metrics for free.
     """
     global _trace_count
     if isinstance(batch_pos, jax.core.Tracer):
@@ -650,6 +659,10 @@ def _evaluate_batched(plan: ReadabilityPlan, batch_pos, edges,
     return EngineResult(overflow=overflow, **out)
 
 
+# in-repo callers predating the public name (shared per-shard body)
+_evaluate_batched = evaluate_batched_body
+
+
 def _evaluate_layouts(plan, batch_pos, edges, n_valid_vertices=None,
                       n_valid_edges=None, use_kernels=False):
     if use_kernels:
@@ -658,8 +671,8 @@ def _evaluate_layouts(plan, batch_pos, edges, n_valid_vertices=None,
         return jax.vmap(
             lambda p: _evaluate(plan, p, edges, use_kernels,
                                 n_valid_vertices, n_valid_edges))(batch_pos)
-    return _evaluate_batched(plan, batch_pos, edges,
-                             n_valid_vertices, n_valid_edges)
+    return evaluate_batched_body(plan, batch_pos, edges,
+                                 n_valid_vertices, n_valid_edges)
 
 
 evaluate_planned = jax.jit(_evaluate_planned,

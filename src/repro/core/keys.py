@@ -120,7 +120,19 @@ class EvalConfig:
       growth; the old ``evaluate_layout`` behavior);
     * ``"kernels"`` — like fused, but the reversal sweep and the
       occlusion count route through the Pallas TPU kernels;
-    * ``"distributed"`` — ``shard_map`` drivers over a device mesh.
+    * ``"distributed"`` — ``shard_map`` drivers over a device mesh:
+      single layouts via the strip-sharded
+      :func:`repro.distributed.gridded.evaluate_sharded`, batches via
+      the batch-axis-sharded
+      :func:`repro.distributed.batched.evaluate_layouts_sharded`.
+
+    ``shards`` bounds how many devices the ``"distributed"`` backend's
+    mesh uses (``None`` = every visible device; values above the device
+    count are clamped).  It is part of the config — and so of the digest
+    and every cache key — because the mesh shape changes the compiled
+    program, even though per-layout *results* are shard-count invariant
+    (``tests/test_sharded_batched.py`` certifies 1/2/4-shard runs agree
+    bit-for-bit on integer metrics).
     """
 
     radius: float = 0.5
@@ -133,6 +145,7 @@ class EvalConfig:
     strip_block: int = 256
     backend: str = "fused"
     precision: str = "float32"
+    shards: Optional[int] = None
 
     def __post_init__(self):
         if self.orientation not in ORIENTATIONS:
@@ -164,6 +177,11 @@ class EvalConfig:
         object.__setattr__(self, "strip_block", int(self.strip_block))
         if self.tier_strips is not None:
             object.__setattr__(self, "tier_strips", bool(self.tier_strips))
+        if self.shards is not None:
+            shards = int(self.shards)
+            if shards < 1:
+                raise ValueError(f"shards must be >= 1, got {shards}")
+            object.__setattr__(self, "shards", shards)
 
     # -- derived views -----------------------------------------------------
 

@@ -46,3 +46,14 @@ def make_mesh(axis_shapes, axis_names, *, axis_types=None, devices=None):
                              devices=devices)
     except TypeError:  # jax 0.4.x: no axis_types parameter
         return jax.make_mesh(axis_shapes, axis_names, devices=devices)
+
+
+def set_mesh(mesh):
+    """Context manager installing ``mesh`` as the ambient mesh.
+
+    Modern jax spells this ``jax.set_mesh(mesh)``; on 0.4.x the
+    :class:`~jax.sharding.Mesh` object itself is the context manager
+    that scopes the global mesh for pjit-style lowering."""
+    if hasattr(jax, "set_mesh"):
+        return jax.set_mesh(mesh)
+    return mesh

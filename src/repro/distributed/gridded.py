@@ -107,6 +107,12 @@ def evaluate_sharded(mesh: Mesh, pos, edges, *, config=None, plan=None):
     Skipped metrics are skipped for real: a crossing-only config builds
     no cell buckets and an occlusion-only config launches no reversal
     sweep (same pruning contract as the fused engine).
+
+    A ``(B, V, 2)`` *batch* routes to the batch-axis-sharded driver
+    (:func:`repro.distributed.batched.evaluate_layouts_sharded`): the
+    mesh then parallelizes over candidate layouts instead of strips —
+    the right decomposition for layout-optimization populations, and
+    bit-identical on integer metrics to the single-host batched engine.
     """
     from repro.core import grid as gridlib
     from repro.core import engine as _engine
@@ -119,6 +125,15 @@ def evaluate_sharded(mesh: Mesh, pos, edges, *, config=None, plan=None):
     config = config or EvalConfig()
     pos = jnp.asarray(pos, jnp.float32)
     edges = jnp.asarray(edges, jnp.int32)
+    if pos.ndim == 3:
+        from repro.distributed.batched import evaluate_layouts_sharded
+        if plan is None:
+            plan = _engine.plan_readability(pos, edges,
+                                            **config.plan_kwargs())
+        res = jax.device_get(
+            evaluate_layouts_sharded(mesh, plan, pos, edges))
+        return res._replace(n_vertices=int(pos.shape[1]),
+                            n_edges=int(edges.shape[0]))
     if plan is None:
         # flat strips: the sharded sweep consumes the dense flat bucket
         # layout (tiering is a single-device pair-tile optimization)

@@ -1,0 +1,180 @@
+"""The cross-backend differential parity matrix — ONE source of truth.
+
+Every backend of the public :class:`repro.api.Evaluator` contract
+(``fused``, ``eager``, ``kernels``, ``distributed``, and the
+mesh-sharded *batched* route of ``distributed``) evaluates the same
+fixture layouts, and every cell of the matrix is held to the same
+documented guarantee (docs/backends.md):
+
+* integer metrics (``N_c``, ``E_c``, ``crossing_count_for_angle``) are
+  **bit-identical** across all backends;
+* float metrics (``M_a``, ``M_l``, ``E_ca``) agree at ``RTOL``
+  (different summation orders / fusion boundaries are the only allowed
+  divergence).
+
+The layout families deliberately include the degenerate regimes where
+tie-breaking and masking bugs live: exact-lattice grids
+(near-axis-parallel edges, ordinate ties), collinear layouts (every
+segment pair mathematically tied — any spurious reversal is a bug), and
+duplicate-position layouts (zero-length edges, zero-distance occlusion
+pairs).
+
+This matrix replaces the scattered pairwise backend asserts as the
+parity source of truth; in CI it runs both single-device and under
+``XLA_FLAGS=--xla_force_host_platform_device_count=4`` (the
+``distributed`` cells then exercise a real 4-device mesh).
+"""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.api import EvalConfig, Evaluator
+
+RADIUS = 2.0
+N_STRIPS = 32
+# the documented cross-backend float tolerance (docs/backends.md)
+RTOL = 1e-5
+
+BACKENDS = ("fused", "eager", "kernels", "distributed", "sharded_batched")
+FAMILIES = ("random", "grid", "cluster", "collinear", "duplicate")
+
+INT_FIELDS = ("node_occlusion", "edge_crossing", "crossing_count_for_angle")
+FLOAT_FIELDS = ("minimum_angle", "edge_length_variation",
+                "edge_crossing_angle")
+
+
+def random_edges(rng, n_vertices, n_edges):
+    edges = set()
+    while len(edges) < n_edges:
+        v, u = rng.integers(0, n_vertices, 2)
+        if v != u:
+            edges.add((min(v, u), max(v, u)))
+    return np.array(sorted(edges), dtype=np.int32)
+
+
+def make_family(kind):
+    rng = np.random.default_rng(7)
+    if kind == "random":
+        n = 160
+        pos = rng.uniform(0, 100, size=(n, 2)).astype(np.float32)
+    elif kind == "grid":
+        # exact small-integer lattice, no jitter, with edges restricted
+        # to slopes {0, inf, +-1}: every strip-boundary ordinate is then
+        # *exact* in float32 (products of exact values), so it is
+        # bit-reproducible across eager/jit fusion boundaries and the
+        # abundant mathematical ties (parallel edges sharing a lattice
+        # line) MUST break identically on every backend.  Arbitrary
+        # integer slopes (5/3, ...) would round differently under FMA
+        # fusion and legitimately flip exact-tie comparisons between
+        # eager and jit — that regime is covered by the jittered random
+        # family, where mathematical ties have measure zero.
+        side = 12
+        n = side * side
+        xs, ys = np.meshgrid(np.arange(side), np.arange(side))
+        pos = np.stack([xs.ravel(), ys.ravel()],
+                       axis=1).astype(np.float32) * 6.0
+        idx = lambda ix, iy: iy * side + ix
+        e = []
+        for ix in range(side):
+            for iy in range(side):
+                if ix + 1 < side:
+                    e.append((idx(ix, iy), idx(ix + 1, iy)))
+                if iy + 1 < side:
+                    e.append((idx(ix, iy), idx(ix, iy + 1)))
+        for _ in range(n):
+            ix, iy = rng.integers(0, side, 2)
+            k = int(rng.integers(1, side))
+            sx, sy = (1, 1) if rng.random() < 0.5 else (1, -1)
+            jx, jy = ix + sx * k, iy + sy * k
+            if 0 <= jx < side and 0 <= jy < side:
+                a, b = idx(ix, iy), idx(jx, jy)
+                if a != b:
+                    e.append((min(a, b), max(a, b)))
+        edges = np.array(sorted(set(e)), np.int32)
+        return pos, edges
+    elif kind == "cluster":
+        centers = rng.uniform(0, 100, size=(4, 2))
+        pts = [c + rng.normal(0, 4.0, size=(40, 2)) for c in centers]
+        pos = np.concatenate(pts).astype(np.float32)
+        n = pos.shape[0]
+    elif kind == "collinear":
+        # degenerate: every vertex on y = x at integer offsets — every
+        # comparable segment pair is mathematically tied at both strip
+        # boundaries, so E_c must be exactly 0 on every backend
+        n = 128
+        x = np.arange(n, dtype=np.float32)
+        pos = np.stack([x, x], axis=1)
+    elif kind == "duplicate":
+        # degenerate: 40 distinct integer positions, each repeated 4x —
+        # zero-distance occlusion pairs and zero-length edges
+        base = rng.integers(0, 60, size=(40, 2)).astype(np.float32)
+        pos = np.repeat(base, 4, axis=0)
+        n = pos.shape[0]
+    else:
+        raise KeyError(kind)
+    edges = random_edges(rng, n, 2 * n)
+    return pos, edges
+
+
+@pytest.fixture(scope="module", params=FAMILIES)
+def family(request):
+    pos, edges = make_family(request.param)
+    ref = Evaluator(EvalConfig(radius=RADIUS, n_strips=N_STRIPS)).evaluate(
+        pos, edges)
+    return request.param, pos, edges, ref
+
+
+def scores_for(backend, pos, edges):
+    if backend == "sharded_batched":
+        # the mesh-sharded batched route: member 0 of a (B, V, 2)
+        # candidate batch must agree with every single-layout backend
+        ev = Evaluator(EvalConfig(radius=RADIUS, n_strips=N_STRIPS,
+                                  backend="distributed"))
+        batch = np.stack([pos, pos + 0.5, pos * 0.75]).astype(np.float32)
+        scores = ev.evaluate_batch(batch, edges)
+        return scores.unbatch()[0]
+    ev = Evaluator(EvalConfig(radius=RADIUS, n_strips=N_STRIPS,
+                              backend=backend))
+    return ev.evaluate(pos, edges)
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_parity_matrix(family, backend):
+    kind, pos, edges, ref = family
+    got = scores_for(backend, pos, edges)
+    assert int(got.overflow) == 0, (backend, kind, "overflow")
+    for f in INT_FIELDS:
+        assert int(getattr(got, f)) == int(getattr(ref, f)), \
+            (backend, kind, f, int(getattr(got, f)), int(getattr(ref, f)))
+    for f in FLOAT_FIELDS:
+        np.testing.assert_allclose(
+            float(getattr(got, f)), float(getattr(ref, f)), rtol=RTOL,
+            err_msg=f"{backend}/{kind}/{f}")
+
+
+def test_collinear_has_zero_crossings(family):
+    """The degenerate guarantee behind the collinear family: exactly-tied
+    segment pairs must never count as reversals (strict inequalities in
+    fused_reversal_block), on the reference backend included."""
+    kind, pos, edges, ref = family
+    if kind != "collinear":
+        pytest.skip("collinear-only assertion")
+    assert int(ref.edge_crossing) == 0
+
+
+def test_matrix_covers_contract():
+    """The matrix IS the acceptance criterion: all 5 backends, >= 4
+    layout families (we run 5, incl. the degenerate pair)."""
+    assert len(BACKENDS) == 5
+    assert len(FAMILIES) >= 4
+    assert {"collinear", "duplicate"} <= set(FAMILIES)
+
+
+def test_distributed_cells_see_forced_devices():
+    """Under the CI forced-host leg the distributed cells must actually
+    run multi-device (mesh == every visible device by default)."""
+    ev = Evaluator(EvalConfig(backend="distributed"))
+    assert ev._mesh().size == len(jax.devices())
+    capped = Evaluator(EvalConfig(backend="distributed", shards=1))
+    assert capped._mesh().size == 1
