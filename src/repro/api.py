@@ -47,13 +47,19 @@ from repro.core.keys import (EvalConfig, pow2_bucket,  # noqa: F401
 from repro.core.metrics import evaluate_exact  # noqa: F401  (re-export)
 from repro.core.scores import (ReadabilityScores,  # noqa: F401
                                scores_from_batch, scores_from_result)
+from repro.core.validate import (BackendUnavailableError,  # noqa: F401
+                                 CapacityError, InvalidInputError,
+                                 ReadabilityError, validate_batch,
+                                 validate_request)
 from repro.launch.session import EvalSession
 
 __all__ = [
-    "ALL_METRICS", "EvalConfig", "EvalSession", "Evaluator",
+    "ALL_METRICS", "BackendUnavailableError", "CapacityError", "EvalConfig",
+    "EvalSession", "Evaluator", "InvalidInputError", "ReadabilityError",
     "ReadabilityScores", "evaluate_exact", "evaluator_for",
     "pow2_bucket", "pow2_chunks", "reset_deprecation_warnings",
     "scores_from_batch", "scores_from_result", "topology_hash",
+    "validate_batch", "validate_request",
 ]
 
 
@@ -134,25 +140,52 @@ class Evaluator:
     # -- evaluation ---------------------------------------------------------
 
     def evaluate(self, pos, edges) -> ReadabilityScores:
-        """Score one layout; returns host scores (one transfer)."""
+        """Score one layout; returns host scores (one transfer).
+
+        Requests are checked per ``EvalConfig.validation`` on every
+        backend: the fused/kernels paths validate inside the serving
+        session; the eager and distributed paths run
+        :func:`~repro.core.validate.validate_request` here (strict mode
+        raises the typed :class:`InvalidInputError`; sanitize mode
+        repairs and records the repair in ``scores.flags``)."""
         backend = self.config.backend
         if backend in ("fused", "kernels"):
             return self._bound_session().evaluate(pos, edges)
-        if backend == "distributed":
-            from repro.distributed.gridded import evaluate_sharded
-            return evaluate_sharded(self._mesh(), pos, edges,
-                                    config=self.config)
-        # eager: plan from the concrete layout (flat strips — per-call
-        # tier shapes would churn the eager sub-op compile caches) and
-        # run the fused program without a jit cache entry
         import numpy as np
+        pos, edges, flags = validate_request(
+            pos, edges, mode=self.config.validation)
         pos = np.asarray(pos, np.float32)
         edges = np.asarray(edges, np.int32)
+        n_v, n_e = pos.shape[0], edges.shape[0]
+        degenerate = n_v == 0 or n_e == 0
+        if backend == "distributed" and not degenerate:
+            from repro.distributed.gridded import evaluate_sharded
+            scores = evaluate_sharded(self._mesh(), pos, edges,
+                                      config=self.config)
+            return scores if flags is None else scores._replace(flags=flags)
+        # eager (and the degenerate distributed case, where a mesh buys
+        # nothing): plan from the concrete layout (flat strips — per-call
+        # tier shapes would churn the eager sub-op compile caches) and
+        # run the fused program without a jit cache entry.  Degenerate
+        # requests (V=0 / E=0) pad to the engine's one-row minimum and
+        # mask the padding via the n_valid scalars, so the traced body
+        # never sees a zero-size array.
         plan = engine.plan_readability(
             pos, edges, **self.config.plan_kwargs(tier_default=False))
+        valid = {}
+        if degenerate:
+            pos_p = np.zeros((max(n_v, 1), 2), np.float32)
+            pos_p[:n_v] = pos
+            edges_p = np.zeros((max(n_e, 1), 2), np.int32)
+            edges_p[:n_e] = edges
+            pos, edges = pos_p, edges_p
+            valid = dict(n_valid_vertices=np.int32(n_v),
+                         n_valid_edges=np.int32(n_e))
         res = engine.evaluate_once(plan, pos, edges,
-                                   use_kernels=self.config.use_kernels)
-        return scores_from_result(res, pos.shape[0], edges.shape[0])
+                                   use_kernels=self.config.use_kernels,
+                                   **valid)
+        scores = scores_from_result(res, n_v, n_e)
+        return scores if flags is None else scores._replace(flags=flags)
 
     def evaluate_batch(self, batch_pos, edges, *,
                        plan: engine.ReadabilityPlan = None
@@ -161,14 +194,45 @@ class Evaluator:
         natively batched dispatch; returns a batched host
         :class:`ReadabilityScores` (``.unbatch()`` for per-layout
         scores).  Plans from the whole batch when ``plan`` is omitted —
-        hot loops should plan once and pass it in."""
+        hot loops should plan once and pass it in.
+
+        The shared edge list is checked per ``EvalConfig.validation``
+        (:func:`~repro.core.validate.validate_batch`): strict raises the
+        typed :class:`InvalidInputError` on out-of-range edges or a
+        non-finite member layout; sanitize repairs the topology once for
+        the whole batch and records it in ``scores.flags``."""
         import numpy as np
         batch_pos = np.asarray(batch_pos, np.float32)
         edges = np.asarray(edges, np.int32)
         if batch_pos.ndim != 3:
             raise ValueError("evaluate_batch wants a (B, V, 2) batch; "
                              f"got shape {batch_pos.shape}")
+        batch_pos, edges, flags = validate_batch(
+            batch_pos, edges, mode=self.config.validation)
+        n_v, n_e = batch_pos.shape[1], edges.shape[0]
         backend = self.config.backend
+        if n_v == 0 or n_e == 0:
+            # degenerate batch: pad to the engine's one-row minimum,
+            # mask via the n_valid scalars, and serve single-host (a
+            # mesh buys nothing at this size) — well-defined scores
+            # instead of the old zero-size planning crash
+            B = batch_pos.shape[0]
+            pos_p = np.zeros((B, max(n_v, 1), 2), np.float32)
+            pos_p[:, :n_v] = batch_pos
+            edges_p = np.zeros((max(n_e, 1), 2), np.int32)
+            edges_p[:n_e] = edges
+            if plan is None:
+                plan = self.plan(batch_pos, edges)
+            if backend == "eager":
+                res = engine._evaluate_batched(
+                    plan, pos_p, edges_p, np.int32(n_v), np.int32(n_e))
+            else:
+                res = engine.evaluate_layouts(
+                    plan, pos_p, edges_p, np.int32(n_v), np.int32(n_e),
+                    use_kernels=self.config.use_kernels)
+            import jax
+            res = jax.device_get(res)
+            return res._replace(n_vertices=n_v, n_edges=n_e, flags=flags)
         if backend == "distributed":
             # mesh-sharded native batching: the batch axis shards over
             # the device mesh, each shard running the engine's batched
@@ -181,8 +245,7 @@ class Evaluator:
             import jax
             res = jax.device_get(
                 evaluate_layouts_sharded(mesh, plan, batch_pos, edges))
-            return res._replace(n_vertices=int(batch_pos.shape[1]),
-                                n_edges=int(edges.shape[0]))
+            return res._replace(n_vertices=n_v, n_edges=n_e, flags=flags)
         if plan is None:
             plan = self.plan(batch_pos, edges)
         if backend == "eager":
@@ -193,8 +256,7 @@ class Evaluator:
                 use_kernels=self.config.use_kernels)
         import jax
         res = jax.device_get(res)
-        return res._replace(n_vertices=int(batch_pos.shape[1]),
-                            n_edges=int(edges.shape[0]))
+        return res._replace(n_vertices=n_v, n_edges=n_e, flags=flags)
 
 
 # ---------------------------------------------------------------------------

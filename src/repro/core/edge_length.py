@@ -22,7 +22,12 @@ def edge_length_variation(pos, edges, *, edge_valid=None):
     n_e = jnp.maximum(jnp.sum(edge_valid), 1)
     l_mu = jnp.sum(jnp.where(edge_valid, lengths, 0.0)) / n_e
     sq = jnp.where(edge_valid, (lengths - l_mu) ** 2, 0.0)
-    l_a = jnp.sqrt(jnp.sum(sq) / (n_e * jnp.maximum(l_mu, 1e-30) ** 2))
+    # maximum(l_mu, 1e-30)**2 underflows to 0 in float32, so an
+    # all-zero-length (duplicate-position) layout divides 0/0 = NaN;
+    # select M_l = 0 for that case instead of rewriting the arithmetic
+    # (the batched path must stay bit-identical to this one)
+    denom = n_e * jnp.maximum(l_mu, 1e-30) ** 2
+    l_a = jnp.where(denom > 0, jnp.sqrt(jnp.sum(sq) / denom), 0.0)
     return jnp.where(n_e > 1, l_a / jnp.sqrt(jnp.maximum(n_e - 1, 1)), 0.0)
 
 
@@ -38,6 +43,8 @@ def edge_length_variation_batched(pos, edges, *, edge_valid=None):
     n_e = jnp.maximum(jnp.sum(ev, axis=1), 1)              # (B,)
     l_mu = jnp.sum(jnp.where(ev, lengths, 0.0), axis=1) / n_e
     sq = jnp.where(ev, (lengths - l_mu[:, None]) ** 2, 0.0)
-    l_a = jnp.sqrt(jnp.sum(sq, axis=1)
-                   / (n_e * jnp.maximum(l_mu, 1e-30) ** 2))
+    # all-duplicate-position guard: see edge_length_variation — the
+    # squared clamp underflows to 0/0 = NaN, so select M_l = 0 there
+    denom = n_e * jnp.maximum(l_mu, 1e-30) ** 2
+    l_a = jnp.where(denom > 0, jnp.sqrt(jnp.sum(sq, axis=1) / denom), 0.0)
     return jnp.where(n_e > 1, l_a / jnp.sqrt(jnp.maximum(n_e - 1, 1)), 0.0)

@@ -712,7 +712,15 @@ def replan_on_overflow(plan: ReadabilityPlan, pos, edges, result,
     concrete offending layout (``pos``/``edges`` — pass the *natural*,
     unpadded arrays) and floors every capacity at ``growth`` x the old
     plan's, so the retry can neither overflow on the same data nor
-    shrink below what previous traffic needed."""
+    shrink below what previous traffic needed.
+
+    This function grows capacities; it does NOT bound the retry loop —
+    that is the caller's contract.  The serving session retries at most
+    ``max_replan_retries`` times with ``growth ** attempt`` (capped at
+    its ``growth_ceiling``) and then surfaces
+    :class:`repro.core.validate.CapacityError` (strict validation) or a
+    ``saturated``-flagged score (sanitize) rather than returning a
+    silently under-counted result — see ``docs/robustness.md``."""
     ov = result.overflow
     # max() handles batched results ((B,)-shaped overflow from
     # evaluate_layouts) as well as scalars and host-side report ints

@@ -484,6 +484,12 @@ def plan_occlusion_grid(pos, radius, pad: int = 8, cap_multiple: int = 8,
     pos_b = np.asarray(pos)
     if pos_b.ndim == 2:
         pos_b = pos_b[None]
+    if pos_b.shape[1] == 0:
+        # degenerate V=0 request: a 1x1 grid nothing falls into (the
+        # n_valid masks exclude everything anyway) instead of a numpy
+        # reduction error on the empty extent
+        return (0.0, 0.0), 1, 1, _round_up(pad, cap_multiple), \
+            2.0 * float(radius)
     lo = pos_b.reshape(-1, 2).min(axis=0) - 1e-6
     hi = pos_b.reshape(-1, 2).max(axis=0) + 1e-6
     size = occlusion_cell_size(lo, hi, radius, pos_b.shape[1],
@@ -512,6 +518,10 @@ def plan_strip_occupancy(pos, edges, n_strips: int, pad: float = 1.25,
 
     pos = np.asarray(pos)
     edges = np.asarray(edges)
+    if edges.shape[0] == 0:
+        # degenerate E=0 request: minimal budget, empty occupancy — the
+        # strip build sees only masked-out padded edges downstream
+        return _round_up(1 + 64, 128), np.zeros(n_strips, np.int64)
     x = pos[:, axis]
     x1, x2 = x[edges[:, 0]], x[edges[:, 1]]
     lo, hi = x1.min(), x2.max()

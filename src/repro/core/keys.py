@@ -42,6 +42,7 @@ from repro.core.engine import ALL_METRICS, DEFAULT_IDEAL
 BACKENDS = ("fused", "eager", "kernels", "distributed")
 ORIENTATIONS = ("vertical", "horizontal", "both")
 PRECISIONS = ("float32", "bfloat16")
+VALIDATIONS = ("strict", "sanitize", "off")
 
 
 # ---------------------------------------------------------------------------
@@ -126,6 +127,14 @@ class EvalConfig:
       the batch-axis-sharded
       :func:`repro.distributed.batched.evaluate_layouts_sharded`.
 
+    ``validation`` selects the request-checking mode of the fault
+    tolerance layer (:mod:`repro.core.validate`): ``"strict"``
+    (default) rejects malformed requests with a typed
+    :class:`~repro.core.validate.InvalidInputError` (quarantined
+    per-slot inside :class:`~repro.launch.session.EvalSession`),
+    ``"sanitize"`` repairs them (drop-and-flag), ``"off"`` skips the
+    checks entirely (see ``docs/robustness.md``).
+
     ``shards`` bounds how many devices the ``"distributed"`` backend's
     mesh uses (``None`` = every visible device; values above the device
     count are clamped).  It is part of the config — and so of the digest
@@ -146,6 +155,7 @@ class EvalConfig:
     backend: str = "fused"
     precision: str = "float32"
     shards: Optional[int] = None
+    validation: str = "strict"
 
     def __post_init__(self):
         if self.orientation not in ORIENTATIONS:
@@ -157,6 +167,9 @@ class EvalConfig:
         if self.precision not in PRECISIONS:
             raise ValueError(f"precision must be one of {PRECISIONS}, "
                              f"got {self.precision!r}")
+        if self.validation not in VALIDATIONS:
+            raise ValueError(f"validation must be one of {VALIDATIONS}, "
+                             f"got {self.validation!r}")
         metrics = (self.metrics,) if isinstance(self.metrics, str) \
             else tuple(self.metrics)
         unknown = [m for m in metrics if m not in ALL_METRICS]

@@ -46,6 +46,19 @@ class ReadabilityScores(NamedTuple):
     means the plan's capacities covered the layout).  ``n_vertices`` /
     ``n_edges`` are host-side sizes filled by the front-door paths;
     they let :meth:`normalized` relate counts to pair budgets.
+
+    ``error`` / ``flags`` are the fault-tolerance fields (host-side
+    only; device results leave them ``None``):
+
+    * ``error`` — a :class:`repro.core.validate.ReadabilityError` when
+      this slot of a quarantining batch call failed (metric fields are
+      then ``None``); :attr:`ok` is the quick check and
+      :meth:`raise_for_error` re-raises it.
+    * ``flags`` — sanitization/saturation record copied from
+      :func:`repro.core.validate.validate_request` (e.g.
+      ``{"sanitized": True, "dropped_edges": 2}`` or
+      ``{"saturated": True}`` when capacity stayed overflowed in
+      sanitize mode).  ``None`` means the request passed untouched.
     """
 
     node_occlusion: Any = None
@@ -57,11 +70,30 @@ class ReadabilityScores(NamedTuple):
     overflow: Any = None
     n_vertices: Any = None
     n_edges: Any = None
+    error: Any = None
+    flags: Any = None
 
     # -- views -------------------------------------------------------------
 
     def asdict(self) -> dict:
         return dict(self._asdict())
+
+    @property
+    def ok(self) -> bool:
+        """True when this slot evaluated (no quarantined error)."""
+        return self.error is None
+
+    @property
+    def saturated(self) -> bool:
+        """True when capacities stayed overflowed after the bounded
+        replan retries (sanitize mode; counts may be under-reported)."""
+        return bool(self.flags) and bool(self.flags.get("saturated"))
+
+    def raise_for_error(self) -> "ReadabilityScores":
+        """Raise the quarantined error, if any; else return self."""
+        if self.error is not None:
+            raise self.error
+        return self
 
     @property
     def batch_size(self):
@@ -125,7 +157,7 @@ class ReadabilityScores(NamedTuple):
         return ReadabilityScores(
             crossing_count_for_angle=got.crossing_count_for_angle,
             overflow=got.overflow, n_vertices=got.n_vertices,
-            n_edges=got.n_edges, **out)
+            n_edges=got.n_edges, error=got.error, flags=got.flags, **out)
 
 
 def _unit(x):
@@ -153,7 +185,16 @@ def scores_from_result(res, n_vertices=None, n_edges=None
         edge_crossing_angle=_cast(res.edge_crossing_angle, float),
         crossing_count_for_angle=_cast(res.crossing_count_for_angle, int),
         overflow=0 if res.overflow is None else int(res.overflow),
-        n_vertices=_cast(n_vertices, int), n_edges=_cast(n_edges, int))
+        n_vertices=_cast(n_vertices, int), n_edges=_cast(n_edges, int),
+        error=getattr(res, "error", None), flags=getattr(res, "flags", None))
+
+
+def error_scores(error, n_vertices=None, n_edges=None) -> ReadabilityScores:
+    """The per-slot result of a quarantined request: every metric
+    ``None``, the typed error attached (``scores.ok`` is False,
+    ``scores.raise_for_error()`` re-raises)."""
+    return ReadabilityScores(error=error, n_vertices=_cast(n_vertices, int),
+                             n_edges=_cast(n_edges, int))
 
 
 def scores_from_batch(res, n_vertices=None, n_edges=None):

@@ -43,6 +43,7 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.core import engine
+from repro.core.validate import BackendUnavailableError
 from repro.distributed.compat import shard_map
 
 
@@ -123,8 +124,18 @@ def evaluate_layouts_sharded(mesh: Mesh, plan, batch_pos, edges, *,
         raise ValueError("evaluate_layouts_sharded wants a (B, V, 2) "
                          f"batch; got shape {batch_pos.shape}")
     padded, B = pad_batch_to_devices(batch_pos, mesh.size)
-    res = _jit_sharded_batched(plan, mesh, padded, edges,
-                               n_valid_vertices, n_valid_edges)
+    try:
+        res = _jit_sharded_batched(plan, mesh, padded, edges,
+                                   n_valid_vertices, n_valid_edges)
+    except Exception as err:
+        # a failed mesh dispatch (device lost, XLA runtime error) is an
+        # infrastructure failure, not a caller bug: surface it as the
+        # typed BackendUnavailableError with the original chained, so
+        # the serving session's degradation ladder (and direct callers)
+        # can catch ONE error class for "this backend cannot dispatch"
+        raise BackendUnavailableError(
+            f"sharded dispatch over {mesh.size} devices failed: "
+            f"{type(err).__name__}: {err}") from err
     if padded.shape[0] != B:
         res = jax.tree_util.tree_map(lambda a: a[:B], res)
     return res

@@ -1,0 +1,176 @@
+"""Deterministic fault injection for the serving layer (chaos harness).
+
+A fault story is only trustworthy if it is *testable*: the chaos suite
+(``tests/test_faults.py``) must be able to make the Nth dispatch fail,
+poison exactly one request of a coalesced batch, take the mesh away
+mid-stream, or keep capacities overflowing forever — deterministically,
+with no monkeypatching of library internals.  :class:`FaultPlan` is that
+knob: a context manager that arms a process-global plan which the
+serving session consults at fixed hook points:
+
+* ``corrupt_request`` — called once per request entering
+  :meth:`EvalSession.evaluate_batch` (by arrival ordinal while the plan
+  is active); selected requests get a NaN injected into their positions
+  *before* validation, so the harness proves the validation layer (not
+  test plumbing) catches the poison.
+* ``check_dispatch`` — called at the top of every engine dispatch;
+  selected ordinals raise :class:`FaultInjected` (a generic
+  infrastructure failure: the session must split the chunk and retry
+  members individually).
+* ``check_sharded`` — called before every mesh-sharded dispatch;
+  selected ordinals raise
+  :class:`~repro.core.validate.BackendUnavailableError` (simulated mesh
+  loss: the session must degrade distributed -> fused single-host).
+* ``storm_overflow`` — applied to every dispatch result while armed;
+  forces the ``overflow`` counter positive so the replan loop can never
+  converge (the session must stop at ``max_replan_retries`` and surface
+  :class:`~repro.core.validate.CapacityError` / a ``saturated`` flag).
+
+All ordinals are 0-based and counted from the moment the plan is armed.
+The plan records what it actually injected in :attr:`FaultPlan.injected`
+so tests can assert the fault fired (a chaos test whose fault never
+triggers is vacuous).  Hooks are no-ops (one global ``is None`` check)
+when no plan is armed — the steady-state serving path pays nothing.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.validate import BackendUnavailableError
+
+_ACTIVE = None
+
+
+class FaultInjected(RuntimeError):
+    """The generic injected infrastructure failure (stands in for an XLA
+    runtime error, an OOM, a device reset, ...)."""
+
+
+def _ordinals(spec):
+    """Normalize a fault-site spec: None/False -> never, True -> always,
+    int -> that single ordinal, iterable -> that set of ordinals."""
+    if spec is None or spec is False:
+        return None
+    if spec is True:
+        return True
+    if isinstance(spec, (int, np.integer)):
+        return {int(spec)}
+    return {int(x) for x in spec}
+
+
+def _hit(spec, ordinal: int) -> bool:
+    return spec is True or (spec is not None and ordinal in spec)
+
+
+class FaultPlan:
+    """Deterministic fault schedule, armed as a context manager::
+
+        with FaultPlan(nan_requests=[2]) as fp:
+            reports = session.evaluate_batch(requests)
+        assert fp.injected["nan_requests"] == 1
+
+    Each keyword takes ``True`` (every occurrence), an int ordinal, or an
+    iterable of ordinals (0-based, counted while the plan is armed):
+
+    * ``nan_requests`` — poison these request ordinals' positions with
+      NaN before validation sees them.
+    * ``fail_dispatches`` — raise :class:`FaultInjected` on these engine
+      dispatch ordinals.
+    * ``mesh_loss_dispatches`` — raise ``BackendUnavailableError`` on
+      these *sharded* dispatch ordinals (simulated mesh loss).
+    * ``overflow_storms`` — force ``overflow > 0`` on these dispatch
+      results (``True`` = every dispatch: the replan loop can never
+      converge).
+    """
+
+    def __init__(self, *, nan_requests=None, fail_dispatches=None,
+                 mesh_loss_dispatches=None, overflow_storms=None):
+        self.nan_requests = _ordinals(nan_requests)
+        self.fail_dispatches = _ordinals(fail_dispatches)
+        self.mesh_loss_dispatches = _ordinals(mesh_loss_dispatches)
+        self.overflow_storms = _ordinals(overflow_storms)
+        self._seen = {"requests": 0, "dispatches": 0, "sharded": 0,
+                      "storm_checks": 0}
+        self.injected = {"nan_requests": 0, "fail_dispatches": 0,
+                         "mesh_loss_dispatches": 0, "overflow_storms": 0}
+
+    def __enter__(self):
+        global _ACTIVE
+        if _ACTIVE is not None:
+            raise RuntimeError("a FaultPlan is already armed; nest-free "
+                               "by design (determinism)")
+        _ACTIVE = self
+        return self
+
+    def __exit__(self, *exc):
+        global _ACTIVE
+        _ACTIVE = None
+        return False
+
+
+def active() -> FaultPlan | None:
+    """The armed plan, or None (the steady-state answer)."""
+    return _ACTIVE
+
+
+# ---------------------------------------------------------------------------
+# hook points (called by the serving session / distributed driver)
+# ---------------------------------------------------------------------------
+
+def corrupt_request(pos):
+    """Request-arrival hook: returns ``pos``, NaN-poisoned if this
+    request ordinal is selected."""
+    p = _ACTIVE
+    if p is None:
+        return pos
+    ordinal = p._seen["requests"]
+    p._seen["requests"] += 1
+    if not _hit(p.nan_requests, ordinal):
+        return pos
+    p.injected["nan_requests"] += 1
+    bad = np.array(pos, np.float32, copy=True)
+    bad[0 if bad.ndim == 2 else (0, 0)] = np.nan
+    return bad
+
+
+def check_dispatch() -> None:
+    """Dispatch hook: raises :class:`FaultInjected` on selected
+    ordinals."""
+    p = _ACTIVE
+    if p is None:
+        return
+    ordinal = p._seen["dispatches"]
+    p._seen["dispatches"] += 1
+    if _hit(p.fail_dispatches, ordinal):
+        p.injected["fail_dispatches"] += 1
+        raise FaultInjected(f"injected dispatch failure (ordinal {ordinal})")
+
+
+def check_sharded() -> None:
+    """Sharded-dispatch hook: raises ``BackendUnavailableError`` on
+    selected ordinals (simulated mesh loss)."""
+    p = _ACTIVE
+    if p is None:
+        return
+    ordinal = p._seen["sharded"]
+    p._seen["sharded"] += 1
+    if _hit(p.mesh_loss_dispatches, ordinal):
+        p.injected["mesh_loss_dispatches"] += 1
+        raise BackendUnavailableError(
+            f"injected mesh loss (sharded dispatch ordinal {ordinal})")
+
+
+def storm_overflow(reports):
+    """Result hook: forces ``overflow`` positive on selected dispatch
+    results (the overflow storm)."""
+    p = _ACTIVE
+    if p is None:
+        return reports
+    ordinal = p._seen["storm_checks"]
+    p._seen["storm_checks"] += 1
+    if not _hit(p.overflow_storms, ordinal):
+        return reports
+    p.injected["overflow_storms"] += 1
+    return [r._replace(overflow=max(int(r.overflow or 0), 1))
+            for r in reports]

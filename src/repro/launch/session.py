@@ -1,12 +1,16 @@
 """Serving session: plan cache, padded shape buckets, auto-replan,
-cross-request batching — config-driven.
+cross-request batching, and the fault-tolerance layer — config-driven.
 
 This is the steady-state fast path the paper's use case implies (score
 layout streams fast enough to sit inside generation loops).  A request is
 ``(pos, edges)``; the session turns a stream of them into a small number
 of fused engine dispatches:
 
-  request --> pow2 shape buckets (V, E rounded up; one bucket function —
+  request --> validate (:func:`repro.core.validate.validate_request`,
+              mode = ``EvalConfig.validation``; a malformed request is
+              QUARANTINED to its own slot here, before it can touch a
+              coalesced batch)
+          --> pow2 shape buckets (V, E rounded up; one bucket function —
               :func:`repro.core.keys.pow2_bucket` — shared by the
               plan-cache key and the padding)
           --> :class:`PlanCache` LRU  [(topology, buckets,
@@ -27,15 +31,45 @@ is a key change, period).  Metric subsets are first-class: a
 crossing-only config plans no occlusion grid and its traced program
 builds no cell buckets (see the counters in :mod:`repro.core.grid`).
 
+**The fault contract** (see ``docs/robustness.md`` for the full
+taxonomy):
+
+* *Poison quarantine* — validation runs per request BEFORE coalescing,
+  so a NaN/Inf layout or an out-of-range edge list fails only its own
+  slot: :meth:`EvalSession.evaluate_batch` returns an error-carrying
+  :class:`~repro.core.scores.ReadabilityScores` (``.ok`` False,
+  ``.error`` the typed :class:`~repro.core.validate.InvalidInputError`)
+  in that slot and clean scores everywhere else — bit-identical on
+  integer metrics to a run that never saw the poison.  The
+  ``quarantined`` counter certifies it.  :meth:`EvalSession.evaluate`
+  (single request) raises instead.
+* *Dispatch splitting* — an exception out of a coalesced dispatch
+  (injected or real) splits the chunk and retries members individually,
+  so one bad interaction cannot fail B-1 innocent requests
+  (``dispatch_failures`` / ``chunk_splits`` counters); a single request
+  that still fails gets the error quarantined to its slot.
+* *Bounded replan backoff* — capacity overflow replans with
+  multiplicative capacity growth (``replan_growth ** attempt``, capped
+  at ``growth_ceiling``) at most ``max_replan_retries`` times.  A
+  result that STILL overflows surfaces
+  :class:`~repro.core.validate.CapacityError` (strict) or a
+  ``saturated``-flagged score (sanitize) instead of silently
+  under-counting (the pre-fault-layer behavior, kept under
+  ``validation="off"``).
+* *Degradation ladder* — a mesh-sharded dispatch failure (mesh lost,
+  shard_map error) falls back distributed -> fused single-host in the
+  same dispatch (results stay bit-identical on integer metrics), marks
+  the mesh lost so later traffic skips it, and counts
+  ``degraded_dispatches``.  :meth:`EvalSession.health` is the
+  operational snapshot; :meth:`EvalSession.restore_mesh` re-arms a
+  repaired mesh.
+
 Padded tail vertices/edges are masked out on device via the engine's
 ``n_valid_vertices`` / ``n_valid_edges`` traced scalars, so every natural
 size inside a bucket shares one jit cache entry (integer metrics are
 bit-identical to natural-size evaluation; see the engine docstring).
-When a layout outgrows its cached plan the result's ``overflow`` counter
-trips; the session re-plans with grown capacities
-(:func:`~repro.core.engine.replan_on_overflow`), retries the dispatch
-once, and caches the bigger plan.  After warmup, steady-state traffic is
-zero-replan and zero-retrace — the ``stats`` counters prove it.
+After warmup, steady-state traffic is zero-replan and zero-retrace — the
+``stats`` counters prove it.
 
 Sessions plan FLAT strips (``tier_strips`` default ``False`` here, via
 ``EvalConfig.plan_kwargs(tier_default=False)``): a cached plan serves a
@@ -57,7 +91,12 @@ import numpy as np
 from repro.core import engine
 from repro.core.keys import (EvalConfig, pow2_bucket, pow2_chunks,
                              topology_hash, warn_once)
-from repro.core.scores import scores_from_batch, scores_from_result
+from repro.core.scores import (error_scores, scores_from_batch,
+                               scores_from_result)
+from repro.core.validate import (BackendUnavailableError, CapacityError,
+                                 InvalidInputError, ReadabilityError,
+                                 validate_request)
+from repro.launch import faults
 
 # Park coordinate for padded tail vertices: far outside any real layout
 # extent.  Correctness rests on the n_valid masks, not on this value —
@@ -69,7 +108,8 @@ _pow2_chunks = pow2_chunks
 
 # EvalSession kwargs that are serving *policy*, not evaluation semantics
 # (they do not belong in EvalConfig and are not deprecated)
-_SESSION_KNOBS = ("cache_size", "vertex_floor", "edge_floor", "max_coalesce")
+_SESSION_KNOBS = ("cache_size", "vertex_floor", "edge_floor", "max_coalesce",
+                  "max_replan_retries", "replan_growth", "growth_ceiling")
 
 
 class PlanCache:
@@ -111,18 +151,22 @@ class PlanCache:
 
 
 class EvalSession:
-    """Plan-caching, shape-bucketing, request-coalescing evaluator.
+    """Plan-caching, shape-bucketing, request-coalescing evaluator with
+    the fault-tolerance layer (quarantine, dispatch splitting, bounded
+    replan backoff, backend degradation — see the module docstring).
 
     ``EvalSession(config)`` is the canonical constructor; the keyword
     knobs are serving policy (cache sizing, padding floors, coalescing
-    width).  The old per-knob evaluation kwargs (``radius=``,
-    ``n_strips=``, ...) are accepted as a deprecation shim and mapped
-    onto an :class:`~repro.core.keys.EvalConfig`.
+    width, replan bounds).  The old per-knob evaluation kwargs
+    (``radius=``, ``n_strips=``, ...) are accepted as a deprecation shim
+    and mapped onto an :class:`~repro.core.keys.EvalConfig`.
     """
 
     def __init__(self, config: EvalConfig = None, *, cache_size: int = 128,
                  vertex_floor: int = 128, edge_floor: int = 128,
-                 max_coalesce: int = 32, mesh=None, **legacy_kwargs):
+                 max_coalesce: int = 32, max_replan_retries: int = 2,
+                 replan_growth: float = 1.5, growth_ceiling: float = 4.0,
+                 mesh=None, **legacy_kwargs):
         if legacy_kwargs:
             if config is not None:
                 raise TypeError("pass either an EvalConfig or legacy "
@@ -142,11 +186,17 @@ class EvalSession:
         self.vertex_floor = int(vertex_floor)
         self.edge_floor = int(edge_floor)
         self.max_coalesce = int(max_coalesce)
+        self.max_replan_retries = int(max_replan_retries)
+        self.replan_growth = float(replan_growth)
+        self.growth_ceiling = float(growth_ceiling)
         # mesh is serving policy, not evaluation semantics: when set (and
         # multi-device), coalesced batches dispatch through the
         # batch-axis-sharded driver — results stay bit-identical on
-        # integer metrics, so routing is transparent to callers
+        # integer metrics, so routing is transparent to callers.  A mesh
+        # dispatch failure flips _mesh_ok: the degradation ladder then
+        # serves single-host until restore_mesh().
         self.mesh = mesh
+        self._mesh_ok = True
         self.plans = PlanCache(cache_size)
         # traces counts engine traces triggered by this session (warmup
         # compiles land here; a steady-state delta of zero is the
@@ -154,6 +204,8 @@ class EvalSession:
         self._stats = {
             "requests": 0, "dispatches": 0, "coalesced": 0,
             "replans": 0, "traces": 0, "sharded_dispatches": 0,
+            "quarantined": 0, "sanitized": 0, "dispatch_failures": 0,
+            "chunk_splits": 0, "degraded_dispatches": 0, "saturated": 0,
         }
 
     @property
@@ -165,9 +217,41 @@ class EvalSession:
         s["plan_misses"] = self.plans.misses
         return s
 
+    def health(self) -> dict:
+        """Operational snapshot: which rung of the degradation ladder
+        the session is serving from, and the counters that certify each
+        fault-tolerance guarantee (see ``docs/robustness.md``)."""
+        degraded = self.mesh is not None and not self._mesh_ok
+        return {
+            "status": "degraded" if degraded else "ok",
+            "backend": self.config.backend,
+            "validation": self.config.validation,
+            "dispatch_mode": ("sharded" if self.mesh is not None
+                              and self.mesh.size > 1 and self._mesh_ok
+                              else "single-host"),
+            "mesh": (None if self.mesh is None else
+                     {"devices": int(self.mesh.size),
+                      "active": bool(self._mesh_ok)}),
+            "plans_cached": len(self.plans),
+            "counters": self.stats,
+        }
+
+    def restore_mesh(self) -> None:
+        """Re-arm the mesh after operator repair: the next coalesced
+        dispatch climbs back up the ladder to sharded serving."""
+        self._mesh_ok = True
+
     # -- request preparation ------------------------------------------------
 
     def _prepare(self, index, pos, edges):
+        """Validate, pad, and key one request.
+
+        Raises :class:`InvalidInputError` (strict mode / uninterpretable
+        input) — the caller quarantines it to this request's slot."""
+        pos, edges, flags = validate_request(
+            pos, edges, mode=self.config.validation, index=index)
+        if flags:
+            self._stats["sanitized"] += 1
         pos = np.asarray(pos, np.float32)
         edges = np.asarray(edges, np.int32)
         n_v, n_e = pos.shape[0], edges.shape[0]
@@ -179,7 +263,7 @@ class EvalSession:
         edges_p[:n_e] = edges
         key = (topology_hash(edges, n_v), vb, eb, self.config)
         return key, dict(index=index, pos=pos, edges=edges, pos_p=pos_p,
-                         edges_p=edges_p, n_v=n_v, n_e=n_e)
+                         edges_p=edges_p, n_v=n_v, n_e=n_e, flags=flags)
 
     def _plan_for(self, key, member):
         plan = self.plans.get(key)
@@ -196,7 +280,14 @@ class EvalSession:
     # -- dispatch -----------------------------------------------------------
 
     def _dispatch(self, plan, chunk):
-        """One engine dispatch for a same-key chunk -> list of scores."""
+        """One engine dispatch for a same-key chunk -> list of scores.
+
+        A sharded dispatch that fails (mesh lost / shard_map error —
+        injected or real) degrades to the fused single-host program
+        *within this dispatch* and marks the mesh lost; integer metrics
+        are bit-identical between the two rungs, so callers never see
+        the difference except in the ``degraded_dispatches`` counter."""
+        faults.check_dispatch()
         t0 = engine.trace_count()
         self._stats["dispatches"] += 1
         n_v = np.int32(chunk[0]["n_v"])
@@ -210,60 +301,176 @@ class EvalSession:
         else:
             self._stats["coalesced"] += len(chunk)
             batch = np.stack([c["pos_p"] for c in chunk])
+            res = None
             if (self.mesh is not None and self.mesh.size > 1
-                    and not use_kernels):
+                    and self._mesh_ok and not use_kernels):
                 # scale-out path: shard the coalesced batch axis over the
                 # mesh (the Pallas-kernel route stays single-device —
                 # its vmapped tiles are not shard_map-composed)
                 from repro.distributed.batched import \
                     evaluate_layouts_sharded
-                self._stats["sharded_dispatches"] += 1
-                res = evaluate_layouts_sharded(
-                    self.mesh, plan, batch, chunk[0]["edges_p"],
-                    n_valid_vertices=n_v, n_valid_edges=n_e)
-            else:
+                try:
+                    faults.check_sharded()
+                    res = evaluate_layouts_sharded(
+                        self.mesh, plan, batch, chunk[0]["edges_p"],
+                        n_valid_vertices=n_v, n_valid_edges=n_e)
+                    self._stats["sharded_dispatches"] += 1
+                except Exception:
+                    # one rung down the ladder: fused single-host (same
+                    # batched body, bit-identical integer metrics); the
+                    # mesh stays off until restore_mesh()
+                    self._mesh_ok = False
+                    self._stats["degraded_dispatches"] += 1
+                    res = None
+            if res is None:
                 res = engine.evaluate_layouts(
                     plan, batch, chunk[0]["edges_p"], n_v, n_e,
                     use_kernels=use_kernels)
             reports = scores_from_batch(res, int(n_v), int(n_e))
         self._stats["traces"] += engine.trace_count() - t0
-        return reports
+        return faults.storm_overflow(reports)
+
+    def _settle(self, member, report):
+        """Attach the member's sanitization flags to its report."""
+        if member["flags"]:
+            merged = dict(report.flags or {})
+            merged.update(member["flags"])
+            report = report._replace(flags=merged)
+        return report
 
     def _run_chunk(self, key, plan, chunk, out):
-        reports = self._dispatch(plan, chunk)
-        worst = max(range(len(reports)), key=lambda i: reports[i].overflow)
-        if reports[worst].overflow > 0:
-            # the layout outgrew the cached plan's capacities: grow the
-            # plan from the worst offender's concrete data, retry ONCE,
-            # and keep the bigger plan for future traffic
-            self._stats["replans"] += 1
-            plan = engine.replan_on_overflow(
-                plan, chunk[worst]["pos"], chunk[worst]["edges"],
-                reports[worst])
-            self.plans.put(key, plan)
+        """Dispatch one chunk with the full fault story: split-and-retry
+        on dispatch exceptions, bounded replan backoff on overflow, and
+        per-slot error results instead of batch-wide failure."""
+        try:
             reports = self._dispatch(plan, chunk)
+            attempt = 0
+            worst = max(range(len(reports)),
+                        key=lambda i: reports[i].overflow)
+            while (reports[worst].overflow > 0
+                   and attempt < self.max_replan_retries):
+                # the layout outgrew the cached plan's capacities: grow
+                # the plan from the worst offender's concrete data with
+                # multiplicative backoff (growth ** attempt, capped), and
+                # keep the bigger plan for future traffic
+                attempt += 1
+                self._stats["replans"] += 1
+                growth = min(self.replan_growth ** attempt,
+                             self.growth_ceiling)
+                plan = engine.replan_on_overflow(
+                    plan, chunk[worst]["pos"], chunk[worst]["edges"],
+                    reports[worst], growth=growth)
+                self.plans.put(key, plan)
+                reports = self._dispatch(plan, chunk)
+                worst = max(range(len(reports)),
+                            key=lambda i: reports[i].overflow)
+        except Exception as err:  # infrastructure failure (XLA, OOM, an
+            # injected fault, ...) — mesh loss never lands here: the
+            # ladder in _dispatch already degraded it to single-host
+            return self._fail_chunk(key, plan, chunk, out, err)
+
+        mode = self.config.validation
         for member, report in zip(chunk, reports):
-            out[member["index"]] = report
+            if report.overflow > 0 and mode != "off":
+                # the bounded retries could not cover this layout: never
+                # return silently under-counted metrics
+                self._stats["saturated"] += 1
+                if mode == "strict":
+                    report = error_scores(
+                        CapacityError(
+                            "plan capacities still overflowed after "
+                            f"{self.max_replan_retries} replan retries "
+                            f"({int(report.overflow)} dropped items)",
+                            request_index=member["index"],
+                            overflow=int(report.overflow)),
+                        member["n_v"], member["n_e"])
+                else:  # sanitize: flag, don't hide
+                    merged = dict(report.flags or {})
+                    merged["saturated"] = True
+                    report = report._replace(flags=merged)
+            out[member["index"]] = self._settle(member, report)
+        return plan
+
+    def _fail_chunk(self, key, plan, chunk, out, err):
+        """A dispatch raised: split the chunk and retry members
+        individually (one poisoned interaction must not take down B-1
+        innocent requests); a single member that still fails has the
+        error quarantined to its own slot."""
+        self._stats["dispatch_failures"] += 1
+        if len(chunk) > 1:
+            self._stats["chunk_splits"] += 1
+            for member in chunk:
+                plan = self._run_chunk(key, plan, [member], out)
+            return plan
+        member = chunk[0]
+        if not isinstance(err, ReadabilityError):
+            wrapped = BackendUnavailableError(
+                f"dispatch failed: {type(err).__name__}: {err}",
+                request_index=member["index"])
+            wrapped.__cause__ = err
+            err = wrapped
+        else:
+            err.request_index = member["index"]
+        self._stats["quarantined"] += 1
+        out[member["index"]] = error_scores(err, member["n_v"],
+                                            member["n_e"])
         return plan
 
     # -- public API ---------------------------------------------------------
 
     def evaluate(self, pos, edges):
-        """One request -> one :class:`ReadabilityScores`."""
-        return self.evaluate_batch([(pos, edges)])[0]
+        """One request -> one :class:`ReadabilityScores`.
+
+        Single-request callers want exceptions, not error slots: a
+        quarantined result re-raises its typed error here."""
+        return self.evaluate_batch([(pos, edges)])[0].raise_for_error()
 
     def evaluate_batch(self, requests):
         """Evaluate ``[(pos, edges), ...]``; same-topology same-bucket
         requests coalesce into single batched dispatches.  Returns scores
-        in request order."""
+        in request order.
+
+        Malformed requests (under ``validation="strict"``/
+        ``"sanitize"``) are QUARANTINED: their slot carries the typed
+        error (``scores.ok`` is False) while every other slot evaluates
+        normally.  Under ``validation="off"`` validation errors cannot
+        arise, and any crash a malformed request causes propagates (the
+        pre-fault-layer behavior)."""
         groups: OrderedDict = OrderedDict()
+        out = [None] * len(requests)
+        quarantine_modes = ("strict", "sanitize")
         for i, (pos, edges) in enumerate(requests):
-            key, member = self._prepare(i, pos, edges)
+            pos = faults.corrupt_request(pos)
+            try:
+                key, member = self._prepare(i, pos, edges)
+            except InvalidInputError as err:
+                if self.config.validation not in quarantine_modes:
+                    raise
+                self._stats["quarantined"] += 1
+                out[i] = error_scores(err)
+                continue
             groups.setdefault(key, []).append(member)
         self._stats["requests"] += len(requests)
-        out = [None] * len(requests)
         for key, members in groups.items():
-            plan = self._plan_for(key, members[0])
+            try:
+                plan = self._plan_for(key, members[0])
+            except InvalidInputError:
+                raise
+            except Exception as err:
+                # host-side planning choked on request data that passed
+                # (or skipped) validation — fail the group's slots, not
+                # the whole call
+                if self.config.validation not in quarantine_modes:
+                    raise
+                for member in members:
+                    self._stats["quarantined"] += 1
+                    out[member["index"]] = error_scores(
+                        InvalidInputError(
+                            f"planning failed: {type(err).__name__}: {err}",
+                            request_index=member["index"],
+                            reason="planning_failed"),
+                        member["n_v"], member["n_e"])
+                continue
             for chunk in pow2_chunks(members, self.max_coalesce):
                 plan = self._run_chunk(key, plan, chunk, out)
         return out

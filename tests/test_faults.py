@@ -1,0 +1,395 @@
+"""Chaos suite: deterministic fault injection against the serving
+session's fault-tolerance layer.
+
+Every guarantee in ``docs/robustness.md`` gets a test that *forces* the
+fault (via :mod:`repro.launch.faults`) and asserts both the outcome and
+the counter that certifies it:
+
+* a NaN-poisoned request in a coalesced batch fails ONLY its own slot,
+  and the innocent members' integer metrics are bit-identical to a run
+  that never saw the poison;
+* a failed dispatch splits the chunk and retries members individually;
+* an overflow storm stops at ``max_replan_retries`` and surfaces
+  ``CapacityError`` (strict) / a ``saturated`` flag (sanitize) instead
+  of silently under-counting;
+* simulated mesh loss degrades distributed -> fused single-host with
+  correct scores (subprocess with 4 forced host devices, same pattern
+  as ``test_sharded_batched.py``).
+"""
+
+import json
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro.core.keys import EvalConfig
+from repro.core.validate import (BackendUnavailableError, CapacityError,
+                                 InvalidInputError)
+from repro.launch import faults
+from repro.launch.faults import FaultInjected, FaultPlan
+from repro.launch.session import EvalSession
+
+RADIUS = 2.0
+N_STRIPS = 48
+
+
+def graph(n_v=60, n_e=120, seed=0):
+    rng = np.random.default_rng(seed)
+    pos = rng.uniform(0, 60, (n_v, 2)).astype(np.float32)
+    n_e = min(n_e, n_v * (n_v - 1) // 2)   # sampling must terminate
+    edges = set()
+    while len(edges) < n_e:
+        v, u = rng.integers(0, n_v, 2)
+        if v != u:
+            edges.add((min(v, u), max(v, u)))
+    return pos, np.array(sorted(edges), np.int32)
+
+
+def requests(B=4, seed=0):
+    """B same-topology layouts (same V/E buckets -> they coalesce)."""
+    pos, edges = graph(seed=seed)
+    rng = np.random.default_rng(seed + 100)
+    return [(pos + rng.normal(0, 1.5, pos.shape).astype(np.float32), edges)
+            for _ in range(B)]
+
+
+def session(validation="strict", **kw):
+    return EvalSession(EvalConfig(radius=RADIUS, n_strips=N_STRIPS,
+                                  validation=validation), **kw)
+
+
+INT_FIELDS = ("node_occlusion", "edge_crossing", "crossing_count_for_angle")
+FLOAT_FIELDS = ("minimum_angle", "edge_length_variation",
+                "edge_crossing_angle")
+
+
+def assert_same_scores(a, b):
+    for f in INT_FIELDS:
+        assert getattr(a, f) == getattr(b, f), f
+    for f in FLOAT_FIELDS:
+        np.testing.assert_allclose(getattr(a, f), getattr(b, f),
+                                   rtol=1e-6, err_msg=f)
+
+
+# ---------------------------------------------------------------------------
+# the harness itself
+# ---------------------------------------------------------------------------
+
+def test_fault_plan_bookkeeping():
+    assert faults.active() is None
+    with FaultPlan(nan_requests=0) as fp:
+        assert faults.active() is fp
+        with pytest.raises(RuntimeError):
+            with FaultPlan():
+                pass  # pragma: no cover
+    assert faults.active() is None
+    # hooks are no-ops when nothing is armed
+    pos = np.ones((3, 2), np.float32)
+    assert faults.corrupt_request(pos) is pos
+    faults.check_dispatch()
+    faults.check_sharded()
+    assert faults.storm_overflow(["x"]) == ["x"]
+
+
+# ---------------------------------------------------------------------------
+# poison quarantine
+# ---------------------------------------------------------------------------
+
+def test_nan_poison_fails_only_its_own_slot():
+    reqs = requests()
+    clean = session().evaluate_batch(reqs)
+    assert all(s.ok for s in clean)
+
+    sess = session()
+    with FaultPlan(nan_requests=2) as fp:
+        scores = sess.evaluate_batch(reqs)
+    assert fp.injected["nan_requests"] == 1
+
+    # the poisoned slot carries the typed error, located
+    assert not scores[2].ok
+    assert isinstance(scores[2].error, InvalidInputError)
+    assert scores[2].error.reason == "non_finite_positions"
+    assert scores[2].error.request_index == 2
+    with pytest.raises(InvalidInputError):
+        scores[2].raise_for_error()
+
+    # every innocent member is bit-identical to the never-poisoned run,
+    # even though the poisoned request arrived into the same coalescing
+    # window (validation runs BEFORE coalescing)
+    for i in (0, 1, 3):
+        assert_same_scores(scores[i], clean[i])
+    assert sess.stats["quarantined"] == 1
+    assert sess.stats["requests"] == 4
+
+
+def test_single_request_evaluate_raises_instead():
+    pos, edges = graph()
+    sess = session()
+    with FaultPlan(nan_requests=0):
+        with pytest.raises(InvalidInputError):
+            sess.evaluate(pos, edges)
+    # the session survives: the next request is served normally
+    assert sess.evaluate(pos, edges).ok
+
+
+def test_validation_off_is_garbage_in_garbage_out():
+    reqs = requests()
+    sess = session(validation="off")
+    # poison the request host planning will use as the group
+    # representative: pre-fault-layer behavior is a crash that takes the
+    # whole call down (nothing is quarantined)
+    with FaultPlan(nan_requests=0):
+        with pytest.raises(Exception):
+            sess.evaluate_batch(reqs)
+    assert sess.stats["quarantined"] == 0
+    # poison a NON-representative member and the cached plan serves the
+    # batch anyway: the engine silently emits garbage (NaN floats) for
+    # that slot — exactly the behavior the validation layer exists to
+    # replace
+    sess2 = session(validation="off")
+    sess2.evaluate_batch(reqs)          # warm the plan cache cleanly
+    with FaultPlan(nan_requests=1):
+        scores = sess2.evaluate_batch(reqs)
+    assert all(s.ok for s in scores)    # no typed errors: nobody noticed
+    assert sess2.stats["quarantined"] == 0
+
+
+# ---------------------------------------------------------------------------
+# dispatch splitting
+# ---------------------------------------------------------------------------
+
+def test_failed_dispatch_splits_chunk_and_retries_members():
+    reqs = requests()
+    clean = session().evaluate_batch(reqs)
+
+    sess = session()
+    with FaultPlan(fail_dispatches=0) as fp:
+        scores = sess.evaluate_batch(reqs)
+    assert fp.injected["fail_dispatches"] == 1
+    # one coalesced dispatch failed; every member was retried alone and
+    # came back correct — no request was lost to a neighbour's fault
+    for got, want in zip(scores, clean):
+        assert got.ok
+        assert_same_scores(got, want)
+    s = sess.stats
+    assert s["dispatch_failures"] == 1
+    assert s["chunk_splits"] == 1
+    assert s["quarantined"] == 0
+
+
+def test_persistent_dispatch_failure_quarantines_each_slot():
+    reqs = requests()
+    sess = session()
+    with FaultPlan(fail_dispatches=True) as fp:
+        scores = sess.evaluate_batch(reqs)
+    assert fp.injected["fail_dispatches"] >= len(reqs)
+    for i, s in enumerate(scores):
+        assert not s.ok
+        assert isinstance(s.error, BackendUnavailableError)
+        assert s.error.request_index == i
+        assert isinstance(s.error.__cause__, FaultInjected)
+    assert sess.stats["quarantined"] == len(reqs)
+    # and the session recovers the moment the fault clears
+    healthy = sess.evaluate_batch(reqs)
+    assert all(s.ok for s in healthy)
+
+
+# ---------------------------------------------------------------------------
+# bounded replan backoff
+# ---------------------------------------------------------------------------
+
+def test_overflow_storm_strict_surfaces_capacity_error():
+    pos, edges = graph()
+    sess = session(max_replan_retries=2)
+    with FaultPlan(overflow_storms=True) as fp:
+        scores = sess.evaluate_batch([(pos, edges)])
+    # initial dispatch + exactly max_replan_retries replans, then stop
+    assert sess.stats["replans"] == 2
+    assert fp.injected["overflow_storms"] == 3
+    assert sess.stats["saturated"] == 1
+    err = scores[0].error
+    assert isinstance(err, CapacityError)
+    assert err.overflow >= 1
+    assert err.request_index == 0
+    # storm over: the session serves clean again (no sticky poison)
+    assert sess.evaluate(pos, edges).ok
+
+
+def test_overflow_storm_sanitize_flags_saturation():
+    pos, edges = graph()
+    sess = session(validation="sanitize", max_replan_retries=1)
+    with FaultPlan(overflow_storms=True):
+        scores = sess.evaluate_batch([(pos, edges)])
+    s = scores[0]
+    # sanitize never hides: the score is returned but marked
+    assert s.ok
+    assert s.saturated
+    assert s.flags["saturated"] is True
+    assert sess.stats["replans"] == 1
+    assert sess.stats["saturated"] == 1
+
+
+def test_replan_growth_is_bounded():
+    sess = session(max_replan_retries=3, replan_growth=2.0,
+                   growth_ceiling=3.0)
+    assert min(sess.replan_growth ** 3, sess.growth_ceiling) == 3.0
+    # a real (non-storm) overflow still converges within the bound:
+    # starve the strip capacity via a tiny n_strips plan on a dense
+    # graph, then watch one replan fix it for the rest of the stream
+    pos, edges = graph(n_v=120, n_e=360, seed=5)
+    r = sess.evaluate(pos, edges)
+    assert r.ok and r.overflow == 0
+
+
+# ---------------------------------------------------------------------------
+# health snapshot
+# ---------------------------------------------------------------------------
+
+def test_health_snapshot_single_host():
+    sess = session()
+    h = sess.health()
+    assert h["status"] == "ok"
+    assert h["dispatch_mode"] == "single-host"
+    assert h["mesh"] is None
+    assert h["validation"] == "strict"
+    pos, edges = graph()
+    sess.evaluate(pos, edges)
+    h = sess.health()
+    assert h["counters"]["requests"] == 1
+    assert h["plans_cached"] == 1
+
+
+# ---------------------------------------------------------------------------
+# degenerate graphs end-to-end (the old planning crashes)
+# ---------------------------------------------------------------------------
+
+def test_degenerate_graphs_end_to_end():
+    sess = session()
+    pos, _ = graph(n_v=8, n_e=10)
+    e0 = np.zeros((0, 2), np.int32)
+    cases = {
+        "no_edges": (pos, e0),
+        "one_vertex": (pos[:1], e0),
+        "empty": (np.zeros((0, 2), np.float32), e0),
+        "all_duplicate": (np.zeros((8, 2), np.float32),
+                          np.array([[0, 1], [2, 3], [4, 5]], np.int32)),
+    }
+    for name, (p, e) in cases.items():
+        s = sess.evaluate(p, e)
+        assert s.ok, name
+        assert s.edge_crossing == 0, name
+        assert np.isfinite(s.edge_length_variation), name
+        n = s.normalized()          # zero pair budgets must not divide by 0
+        for f in ("node_occlusion", "edge_crossing", "minimum_angle",
+                  "edge_length_variation", "edge_crossing_angle"):
+            v = getattr(n, f)
+            assert v is not None and 0.0 <= v <= 1.0, (name, f)
+    # all-duplicate positions: every edge has length 0, so the variation
+    # is exactly 0 (this used to be NaN via a float32 underflow)
+    assert sess.evaluate(*cases["all_duplicate"]).edge_length_variation == 0.0
+
+
+# ---------------------------------------------------------------------------
+# degradation ladder: simulated mesh loss (forced 4-device subprocess)
+# ---------------------------------------------------------------------------
+
+MESH_SCRIPT = r"""
+import os, sys, json
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+import jax
+import numpy as np
+
+from repro.core.keys import EvalConfig
+from repro.distributed.compat import make_mesh
+from repro.launch.faults import FaultPlan
+from repro.launch.session import EvalSession
+
+assert len(jax.devices()) == 4
+
+rng = np.random.default_rng(7)
+pos = rng.uniform(0, 60, (60, 2)).astype(np.float32)
+edges = set()
+while len(edges) < 120:
+    v, u = rng.integers(0, 60, 2)
+    if v != u:
+        edges.add((min(v, u), max(v, u)))
+edges = np.array(sorted(edges), np.int32)
+reqs = [(pos + rng.normal(0, 1.5, pos.shape).astype(np.float32), edges)
+        for _ in range(4)]
+
+config = EvalConfig(radius=2.0, n_strips=48)
+mesh = make_mesh((4,), ("eval",))
+
+# ground truth: a single-host session (no mesh at all)
+truth = EvalSession(config).evaluate_batch(reqs)
+
+sess = EvalSession(config, mesh=mesh)
+with FaultPlan(mesh_loss_dispatches=0) as fp:
+    degraded = sess.evaluate_batch(reqs)
+health_after_loss = sess.health()
+
+# the mesh stays off for subsequent traffic until restored
+sess.evaluate_batch(reqs)
+sharded_while_down = sess.stats["sharded_dispatches"]
+sess.restore_mesh()
+restored = sess.evaluate_batch(reqs)
+health_restored = sess.health()
+
+out = {
+    "injected": fp.injected["mesh_loss_dispatches"],
+    "degraded_dispatches": sess.stats["degraded_dispatches"],
+    "quarantined": sess.stats["quarantined"],
+    "sharded_while_down": sharded_while_down,
+    "sharded_after_restore": sess.stats["sharded_dispatches"],
+    "health_after_loss": {
+        "status": health_after_loss["status"],
+        "dispatch_mode": health_after_loss["dispatch_mode"],
+        "mesh_active": health_after_loss["mesh"]["active"],
+    },
+    "health_restored": {
+        "status": health_restored["status"],
+        "dispatch_mode": health_restored["dispatch_mode"],
+    },
+    "same_as_truth": [
+        [s.edge_crossing, s.node_occlusion] == [t.edge_crossing,
+                                                t.node_occlusion]
+        and s.ok and t.ok
+        for s, t in zip(degraded, truth)],
+    "restored_same": [
+        [s.edge_crossing, s.node_occlusion] == [t.edge_crossing,
+                                                t.node_occlusion]
+        for s, t in zip(restored, truth)],
+}
+print("RESULT " + json.dumps(out))
+"""
+
+
+def test_mesh_loss_degrades_to_single_host():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    result = subprocess.run([sys.executable, "-c", MESH_SCRIPT],
+                            env=env, capture_output=True, text=True,
+                            timeout=900)
+    assert result.returncode == 0, result.stdout + "\n" + result.stderr
+    line = [l for l in result.stdout.splitlines()
+            if l.startswith("RESULT ")][-1]
+    out = json.loads(line[len("RESULT "):])
+
+    assert out["injected"] == 1
+    assert out["degraded_dispatches"] == 1
+    assert out["quarantined"] == 0
+    # the lost mesh never served, and stays off until restore_mesh()
+    assert out["sharded_while_down"] == 0
+    assert out["health_after_loss"] == {"status": "degraded",
+                                        "dispatch_mode": "single-host",
+                                        "mesh_active": False}
+    # degraded results are still correct (bit-identical integers)
+    assert all(out["same_as_truth"])
+    # after restore the ladder climbs back up to sharded serving
+    assert out["health_restored"] == {"status": "ok",
+                                      "dispatch_mode": "sharded"}
+    assert out["sharded_after_restore"] >= 1
+    assert all(out["restored_same"])
