@@ -3,9 +3,13 @@
 Both servers are built from the SAME :class:`repro.core.keys.EvalConfig`
 (only the ``backend`` differs), so what is measured is purely the
 serving architecture.  Compares, on steady-state mixed-size request
-streams at |V| in {200, 1k, 5k} (layout-local graphs, modest per-request
-perturbations — the 'score candidate layouts inside a generation loop'
-regime):
+streams at |V| in {200, 1k, 5k, 10k} (layout-local graphs, modest
+per-request perturbations — the 'score candidate layouts inside a
+generation loop' regime; the 10k row is the large-graph regime a
+session may later route to the graph-sharded path, so its serving gain
+must stay measurable).  Per-size latency records p50 AND p95 — tail
+latency is what a serving SLO prices, and the p95/p50 gap is where
+replans/retraces would hide:
 
   * the eager baseline (``backend="eager"``): host-side re-planning +
     eager fused evaluation per request — what every request paid before
@@ -51,7 +55,7 @@ from engine_bench import make_graph  # noqa: E402
 from repro.core.keys import EvalConfig  # noqa: E402
 from repro.launch.serve import ReadabilityServer  # noqa: E402
 
-SIZES = (200, 1000, 5000)
+SIZES = (200, 1000, 5000, 10000)
 N_STRIPS = 128
 PER_SIZE = 2          # requests per size per mixed round
 WARMUP_ROUNDS = 2
@@ -65,13 +69,17 @@ def perturbed(pos, rng, n_v):
     return pos + rng.normal(0, sigma, pos.shape).astype(np.float32)
 
 
-def p50_ms(fn, reps):
+def lat_ms(fn, reps):
+    """(p50, p95) latency in ms over ``reps`` calls.  With single-digit
+    rep counts the p95 is an interpolated near-max — still the right
+    record: one replan or retrace in the window shows up there first."""
     times = []
     for _ in range(reps):
         t0 = time.perf_counter()
         fn()
         times.append(time.perf_counter() - t0)
-    return float(np.median(times)) * 1e3
+    return (float(np.median(times)) * 1e3,
+            float(np.percentile(times, 95)) * 1e3)
 
 
 def validation_overhead(base, graphs, rng):
@@ -198,18 +206,19 @@ def main(argv=None):
     # -- per-size p50 latency (single requests, steady state) -------------
     for n in SIZES:
         pos, edges = graphs[n]
-        t_eager = p50_ms(
+        t_eager, t_eager95 = lat_ms(
             lambda: eager.evaluate(perturbed(pos, rng, n), edges),
             EAGER_REPS)
-        t_sess = p50_ms(
+        t_sess, t_sess95 = lat_ms(
             lambda: sess.evaluate(perturbed(pos, rng, n), edges),
             SESSION_REPS)
         rec = {"n_vertices": n, "n_edges": int(edges.shape[0]),
-               "eager_p50_ms": t_eager, "session_p50_ms": t_sess,
+               "eager_p50_ms": t_eager, "eager_p95_ms": t_eager95,
+               "session_p50_ms": t_sess, "session_p95_ms": t_sess95,
                "speedup": t_eager / t_sess}
         results["sizes"].append(rec)
-        print(f"|V|={n:5d}: eager {t_eager:8.1f} ms/req  "
-              f"session {t_sess:7.1f} ms/req  "
+        print(f"|V|={n:5d}: eager {t_eager:8.1f}/{t_eager95:8.1f} ms "
+              f"(p50/p95)  session {t_sess:7.1f}/{t_sess95:7.1f} ms  "
               f"speedup {rec['speedup']:.1f}x", flush=True)
 
     # -- mixed-size stream throughput (coalesced batches) -----------------

@@ -28,8 +28,12 @@ one-model-per-metric predictor, PAPERS.md) pay for one metric.
 
 Backends (see :class:`~repro.core.keys.EvalConfig`): ``"fused"``
 (plan-cached jitted engine — default), ``"eager"`` (plan per call, no
-jit cache growth), ``"kernels"`` (Pallas TPU kernels), and
-``"distributed"`` (``shard_map`` drivers over a mesh).
+jit cache growth), ``"kernels"`` (Pallas TPU kernels),
+``"distributed"`` (``shard_map`` drivers over a mesh: strip-sharded
+singles, batch-axis-sharded batches), and ``"graph_sharded"`` (ONE
+layout spatially partitioned over the mesh with a single halo exchange
+— the million-vertex single-graph path, served through the session's
+degradation ladder).
 
 The old entry points (``repro.core.metrics.evaluate_layout``,
 ``EvalSession(**kwargs)``, ``ReadabilityServer(method=...)``) remain as
@@ -76,7 +80,11 @@ class Evaluator:
       buckets, auto-replan on overflow).  ``backend="eager"`` plans per
       call and runs the fused program eagerly (no jit cache growth);
       ``backend="distributed"`` routes through
-      :func:`repro.distributed.gridded.evaluate_sharded` over ``mesh``.
+      :func:`repro.distributed.gridded.evaluate_sharded` over ``mesh``;
+      ``backend="graph_sharded"`` is served by the session too — ONE
+      layout spatially partitioned over the mesh
+      (:func:`repro.distributed.graph_sharded.evaluate_graph_sharded`),
+      degrading to single-host fused on mesh loss.
     * :meth:`evaluate_batch` — ``(B, V, 2)`` candidate layouts of ONE
       graph in one natively batched dispatch; returns a batched
       :class:`ReadabilityScores` (fields carry a leading ``B`` dim;
@@ -149,7 +157,10 @@ class Evaluator:
         raises the typed :class:`InvalidInputError`; sanitize mode
         repairs and records the repair in ``scores.flags``)."""
         backend = self.config.backend
-        if backend in ("fused", "kernels"):
+        if backend in ("fused", "kernels", "graph_sharded"):
+            # graph_sharded rides the session too: it owns the mesh
+            # bring-up, validation/quarantine, and the degradation
+            # ladder down to single-host fused on mesh loss
             return self._bound_session().evaluate(pos, edges)
         import numpy as np
         pos, edges, flags = validate_request(
@@ -245,6 +256,26 @@ class Evaluator:
             import jax
             res = jax.device_get(
                 evaluate_layouts_sharded(mesh, plan, batch_pos, edges))
+            return res._replace(n_vertices=n_v, n_edges=n_e, flags=flags)
+        if backend == "graph_sharded":
+            # spatial partitioning is per-layout: each member IS the
+            # sharded unit, so the batch axis is a host-side loop of
+            # graph-sharded dispatches (one jit entry — the plan and
+            # mesh are static and shared).  Flat strips: the per-device
+            # slot maps must be SPMD-uniform, so tiers are off.
+            from repro.distributed.graph_sharded import evaluate_graph_sharded
+            import jax
+            mesh = self._mesh()
+            if plan is None:
+                plan = engine.plan_readability(
+                    batch_pos, edges,
+                    **self.config.plan_kwargs(tier_default=False))
+            results = [jax.device_get(
+                           evaluate_graph_sharded(mesh, plan,
+                                                  batch_pos[i], edges))
+                       for i in range(batch_pos.shape[0])]
+            res = jax.tree_util.tree_map(
+                lambda *xs: np.stack(xs), *results)
             return res._replace(n_vertices=n_v, n_edges=n_e, flags=flags)
         if plan is None:
             plan = self.plan(batch_pos, edges)

@@ -166,6 +166,11 @@ class ReadabilityPlan:
     # of the plan so a precision change retraces instead of reusing a
     # cache entry compiled for the other dtype
     precision: str = "float32"
+    # graph-axis sharding spec (:class:`repro.core.grid.GraphShardSpec`)
+    # when this plan drives ``backend="graph_sharded"``; None on
+    # single-host plans.  Hashable plan data, so a mesh-size change is a
+    # retrace, never a silent reuse of another mesh's program.
+    graph_shard: tuple = None
 
     @property
     def orientation(self) -> str:
@@ -661,6 +666,238 @@ def evaluate_batched_body(plan: ReadabilityPlan, batch_pos, edges,
 
 # in-repo callers predating the public name (shared per-shard body)
 _evaluate_batched = evaluate_batched_body
+
+
+# ---------------------------------------------------------------------------
+# graph-axis sharding: ONE layout spatially partitioned across a mesh
+# ---------------------------------------------------------------------------
+
+def _shard_occlusion(plan: ReadabilityPlan, pos, vertex_valid, shard,
+                     axis_name):
+    """This shard's slice of the occlusion sweep: owned-cell buckets, one
+    one-sided halo exchange, forward-neighbourhood pair count.
+
+    Each shard buckets only the vertices whose cell falls in its owned
+    contiguous flat-cell range (same one-sort gather bucketing and the
+    same keep-first-``cap`` drop rule as the single-host path, so kept
+    sets match per cell).  The forward-neighbourhood offsets
+    (:data:`repro.core.grid.FORWARD_NEIGHBOURHOOD`) read at most
+    ``nx + 1`` cells ahead, all covered by the halo slab received from
+    the next shard — the owner-cell rule: every cross-boundary pair is
+    counted by the shard owning its lower-flat-id cell, exactly once.
+    Returns local ``(count, overflow)`` (pre-psum).
+    """
+    from repro.distributed.collectives import halo_exchange
+
+    spec = plan.graph_shard
+    nx, ny = plan.grid_nx, plan.grid_ny
+    n_cells = nx * ny
+    per_c, H, cap = spec.cells_per_shard, spec.halo_cells, plan.cell_cap
+    origin, size = plan.grid_origin, plan.grid_cell_size
+
+    gridlib.CALL_COUNTS["cell_builds"] += 1
+    ix = jnp.clip(jnp.floor((pos[:, 0] - origin[0]) / size)
+                  .astype(jnp.int32), 0, nx - 1)
+    iy = jnp.clip(jnp.floor((pos[:, 1] - origin[1]) / size)
+                  .astype(jnp.int32), 0, ny - 1)
+    cid = iy * nx + ix                                     # (V,)
+    c0 = (shard * per_c).astype(jnp.int32)
+    local = cid - c0
+    own = (local >= 0) & (local < per_c)
+    if vertex_valid is not None:
+        own = own & vertex_valid
+    x, y, bval, _, overflow = gridlib.gather_ragged_buckets(
+        local[None], per_c, np.arange(per_c, dtype=np.int64) * cap,
+        np.full(per_c, cap, np.int64), pos[None, :, 0], pos[None, :, 1],
+        valid=own[None])
+    x = x.reshape(per_c, cap)
+    y = y.reshape(per_c, cap)
+    bval = bval.reshape(per_c, cap)
+
+    # ONE one-sided exchange: the halo (the H cells after the owned
+    # range) is a prefix of the NEXT shard's owned range by plan
+    # construction (cells_per_shard >= halo_cells), so its bucket rows
+    # arrive ready-made.  Wrap-around/past-the-grid halo rows are
+    # killed by the global-id mask.
+    hx, hy, hv = halo_exchange((x[:H], y[:H], bval[:H]), axis_name)
+    halo_gid = c0 + per_c + jnp.arange(H, dtype=jnp.int32)
+    hv = hv & (halo_gid < n_cells)[:, None]
+    xt = jnp.concatenate([x, hx])
+    yt = jnp.concatenate([y, hy])
+    vt = jnp.concatenate([bval, hv])
+
+    # forward-neighbourhood ids, local to the concatenated table
+    lidx = jnp.arange(per_c, dtype=jnp.int32)
+    gcid = c0 + lidx
+    gx, gy = gcid % nx, gcid // nx
+    exists = gcid < n_cells
+    ids, oks = [], []
+    for dx, dy in gridlib.FORWARD_NEIGHBOURHOOD:
+        ids.append(lidx + dy * nx + dx)
+        oks.append(exists & (gx + dx >= 0) & (gx + dx < nx)
+                   & (gy + dy < ny))
+    nbr_idx = jnp.clip(jnp.stack(ids, axis=1), 0, per_c + H - 1)
+    nbr_ok = jnp.stack(oks, axis=1)                        # (per_c, 4)
+
+    thresh = jnp.asarray((2.0 * plan.radius) ** 2, pos.dtype)
+    rows = per_c
+    cell_block = max(1, min(plan.cell_block, rows))
+    n_blocks = -(-rows // cell_block)
+    pad_rows = n_blocks * cell_block
+
+    def padr(a, fill):
+        extra = pad_rows - rows
+        if extra == 0:
+            return a
+        return jnp.concatenate(
+            [a, jnp.full((extra,) + a.shape[1:], fill, a.dtype)])
+
+    xp, yp, vp = padr(x, 0.0), padr(y, 0.0), padr(bval, False)
+    nip, nop = padr(nbr_idx, 0), padr(nbr_ok, False)
+
+    def block_fn(b0):
+        sl = lambda a: lax.dynamic_slice_in_dim(a, b0, cell_block, axis=0)
+        bx, by, bv = sl(xp), sl(yp), sl(vp)
+        ni, no = sl(nip), sl(nop)
+        tri = jnp.arange(cap)[:, None] < jnp.arange(cap)[None, :]
+        d2 = ((bx[:, :, None] - bx[:, None, :]) ** 2
+              + (by[:, :, None] - by[:, None, :]) ** 2)
+        smask = bv[:, :, None] & bv[:, None, :] & tri[None]
+        same = jnp.sum(jnp.where(smask & (d2 < thresh), 1, 0),
+                       dtype=gridlib.count_dtype())
+        cx = xt[ni].reshape(cell_block, -1)
+        cy = yt[ni].reshape(cell_block, -1)
+        cv = (vt[ni] & no[:, :, None]).reshape(cell_block, -1)
+        c2 = ((bx[:, :, None] - cx[:, None, :]) ** 2
+              + (by[:, :, None] - cy[:, None, :]) ** 2)
+        cmask = bv[:, :, None] & cv[:, None, :]
+        cross = jnp.sum(jnp.where(cmask & (c2 < thresh), 1, 0),
+                        dtype=gridlib.count_dtype())
+        return same + cross
+
+    starts = jnp.arange(0, pad_rows, cell_block, dtype=jnp.int32)
+    return jnp.sum(lax.map(block_fn, starts)), overflow[0]
+
+
+def evaluate_graph_shard_body(plan: ReadabilityPlan, pos, edges, *,
+                              axis_name, n_valid_vertices=None,
+                              n_valid_edges=None) -> EngineResult:
+    """The per-shard program of ``backend="graph_sharded"``: ONE layout
+    spatially partitioned across a mesh (run under ``shard_map`` with
+    fully replicated inputs; every device computes its owned slice and
+    the outputs are replicated psum totals).
+
+    Division of labour per device ``i`` (ranges from
+    ``plan.graph_shard``, a :class:`~repro.core.grid.GraphShardSpec`):
+
+    * **strips** (E_c / E_ca): the strip build is replicated (it is an
+      O(E) clip whose domain derives deterministically from the
+      replicated layout), then each shard buckets and sweeps only strips
+      ``[i * strips_per_shard, ...)`` — embarrassingly parallel, zero
+      collectives beyond the final psum of partial (count, deviation)
+      sums;
+    * **occlusion** (N_c): grid cells partition contiguously with ONE
+      one-sided halo exchange for boundary cells (:func:`_shard_occlusion`
+      — the owner-cell rule counts each cross-boundary pair exactly
+      once);
+    * **M_a / M_l**: O(E log E) / O(E) replicated — cheaper than any
+      collective (the same call the single-host path makes, so floats
+      are bit-identical).
+
+    Integer metrics are bit-identical to the single-host fused path under
+    the same (flat-capacity) plan and invariant to the shard count: kept
+    sets match per bucket (same stable keep-first-``cap`` drop rule),
+    pair formulas match bitwise, and integer partial sums are
+    order-independent under psum.  E_ca's float deviation sum may differ
+    in summation order only.
+    """
+    global _trace_count
+    if isinstance(pos, jax.core.Tracer):
+        _trace_count += 1
+    if plan.graph_shard is None:
+        raise ValueError("evaluate_graph_shard_body needs a plan with "
+                         "graph_shard set (see grid.plan_graph_shards)")
+    pos = jnp.asarray(pos, plan.dtype)
+    edges = jnp.asarray(edges, jnp.int32)
+    shard = lax.axis_index(axis_name)
+    spec = plan.graph_shard
+    vertex_valid = None
+    if n_valid_vertices is not None:
+        vertex_valid = (jnp.arange(pos.shape[0], dtype=jnp.int32)
+                        < jnp.asarray(n_valid_vertices, jnp.int32))
+    edge_valid = None
+    if n_valid_edges is not None:
+        edge_valid = (jnp.arange(edges.shape[0], dtype=jnp.int32)
+                      < jnp.asarray(n_valid_edges, jnp.int32))
+    m = plan.metrics
+    out = {}
+    overflow = jnp.zeros((), jnp.int32)
+
+    if "node_occlusion" in m:
+        cnt, ov = _shard_occlusion(plan, pos, vertex_valid, shard,
+                                   axis_name)
+        out["node_occlusion"] = lax.psum(cnt, axis_name)
+        overflow = overflow + lax.psum(ov, axis_name)
+    if "minimum_angle" in m:
+        m_a, _ = minimum_angle(pos, edges, edge_valid=edge_valid)
+        out["minimum_angle"] = m_a
+    if "edge_length_variation" in m:
+        out["edge_length_variation"] = edge_length_variation(
+            pos, edges, edge_valid=edge_valid)
+
+    want_ec = "edge_crossing" in m
+    want_eca = "edge_crossing_angle" in m
+    if want_ec or want_eca:
+        per_s = spec.strips_per_shard
+        s0 = (shard * per_s).astype(jnp.int32)
+        stats = []
+        for axis, (max_segments, cap) in zip(plan.axes, plan.strip_plans):
+            segs = gridlib.build_strip_segments(
+                pos, edges, plan.n_strips, max_segments, axis=axis,
+                edge_valid=edge_valid)
+            lkey = segs.strip - s0
+            # segs.valid is load-bearing beyond masking padding: the
+            # trash strip id (n_strips) can fall inside the LAST shard's
+            # local range when strips_per_shard * n_shards > n_strips
+            own = segs.valid & (lkey >= 0) & (lkey < per_s)
+            yl, yr, th, v, u, ok, _, drop = gridlib.gather_ragged_buckets(
+                lkey[None], per_s, np.arange(per_s, dtype=np.int64) * cap,
+                np.full(per_s, cap, np.int64), segs.yl[None],
+                segs.yr[None], segs.theta[None], segs.v[None],
+                segs.u[None], valid=own[None])
+            gridlib.CALL_COUNTS["reversal_sweeps"] += 1
+            rc, rd = _reversal_rows(
+                yl.reshape(per_s, cap), yr.reshape(per_s, cap),
+                th.reshape(per_s, cap), v.reshape(per_s, cap),
+                u.reshape(per_s, cap), ok.reshape(per_s, cap),
+                ideal=plan.ideal, with_angle=want_eca,
+                row_block=min(plan.strip_block, per_s))
+            cnt = lax.psum(jnp.sum(rc), axis_name)
+            dev = lax.psum(jnp.sum(rd), axis_name)
+            # segs.overflow is replicated (identical on every device):
+            # add it once, outside the psum of the per-shard drops
+            ov_ax = lax.psum(drop[0], axis_name) + segs.overflow
+            stats.append((cnt, dev, ov_ax))
+        if len(stats) == 1:
+            (ec_count, best_dev, ec_ov) = stats[0]
+            best_count = ec_count
+        else:
+            (c0_, d0, o0), (c1, d1, o1) = stats
+            ec_count = jnp.maximum(c0_, c1)
+            ec_ov = jnp.maximum(o0, o1)
+            take1 = c1 > c0_
+            best_count = jnp.where(take1, c1, c0_)
+            best_dev = jnp.where(take1, d1, d0)
+        if want_ec:
+            out["edge_crossing"] = ec_count
+        if want_eca:
+            out["edge_crossing_angle"] = jnp.where(
+                best_count > 0,
+                1.0 - best_dev / jnp.maximum(best_count, 1), 1.0)
+            out["crossing_count_for_angle"] = best_count
+        overflow = overflow + ec_ov
+
+    return EngineResult(overflow=overflow, **out)
 
 
 def _evaluate_layouts(plan, batch_pos, edges, n_valid_vertices=None,

@@ -32,15 +32,28 @@ import jax.numpy as jnp
 # use these four directed offsets.
 HALF_NEIGHBOURHOOD = ((1, 0), (0, 1), (1, 1), (1, -1))
 
+# The same unordered pair set with every offset pointing *forward* in
+# flat-id order: (1, -1) (SE) is replaced by its mirror (-1, 1) (NW),
+# which pairs the same cells from the other endpoint.  With row-major
+# flat ids every neighbour then lives at ``c + {1, nx-1, nx, nx+1}`` —
+# strictly ahead of ``c`` — so a contiguous-range cell partition needs
+# exactly ONE one-sided halo of ``nx + 1`` cells from the next shard.
+# (a-b)^2 == (b-a)^2 bitwise in IEEE arithmetic and the per-pair counts
+# are integers, so the forward sweep is bit-identical to the
+# HALF_NEIGHBOURHOOD sweep.
+FORWARD_NEIGHBOURHOOD = ((1, 0), (-1, 1), (0, 1), (1, 1))
+
 # Work counters (python side effects: bump once per eager call / per trace).
 # The engine benchmark uses these to certify the fused path really does
 # 2 strip builds + 2 reversal sweeps where the unfused path does 4 + 4,
 # and the metric-subset tests use them to prove pruned configs never
 # build the decompositions they don't need (crossing-only builds zero
 # cell buckets; occlusion-only runs zero sweeps; dropping minimum_angle
-# skips the vertex-key sort).
+# skips the vertex-key sort).  ``halo_exchanges`` certifies the
+# graph-sharded path's collective budget: exactly ONE boundary-cell
+# exchange per evaluation, zero for strip-only metric subsets.
 CALL_COUNTS = {"strip_builds": 0, "reversal_sweeps": 0, "cell_builds": 0,
-               "vertex_sorts": 0}
+               "vertex_sorts": 0, "halo_exchanges": 0}
 
 
 def reset_call_counts():
@@ -89,6 +102,26 @@ class StripSegments(NamedTuple):
     u: jax.Array        # (S,) int32
     valid: jax.Array    # (S,) bool
     overflow: jax.Array  # () int32 segments dropped by max_segments budget
+
+
+class GraphShardSpec(NamedTuple):
+    """Static per-device partition of ONE layout's decompositions.
+
+    Shard ``i`` owns strip range ``[i * strips_per_shard, ...)`` and the
+    contiguous flat-cell range ``[i * cells_per_shard, ...)``; ranges
+    past the end of the real strip/cell counts are empty (masked).  The
+    halo is the ``halo_cells`` flat cells immediately after the owned
+    range — guaranteed to be a prefix of the next shard's owned range
+    because :func:`plan_graph_shards` forces ``cells_per_shard >=
+    halo_cells`` — so the forward-neighbourhood sweep needs exactly one
+    one-sided exchange.  Plain ints: hashable plan data (part of
+    :class:`repro.core.engine.ReadabilityPlan`, so a mesh-size change is
+    a retrace, never a silent reuse)."""
+
+    n_shards: int
+    strips_per_shard: int
+    cells_per_shard: int
+    halo_cells: int
 
 
 class SegmentBuckets(NamedTuple):
@@ -557,6 +590,25 @@ def plan_strips(pos, edges, n_strips: int, pad: float = 1.25,
                                                    pad=pad, axis=axis)
     cap = _round_up(int(per_strip.max() * pad) + 8, cap_multiple)
     return max_segments, cap
+
+
+def plan_graph_shards(n_strips: int, nx: int, ny: int,
+                      n_shards: int) -> GraphShardSpec:
+    """Partition strips and grid cells contiguously over ``n_shards``.
+
+    ``cells_per_shard`` is clamped to at least ``nx + 1`` (the halo
+    width): the forward-neighbourhood sweep of owned cell ``c`` reads at
+    most ``c + nx + 1``, so a halo of ``nx + 1`` cells that is a prefix
+    of the *next* shard's owned range covers every cross-boundary pair
+    with a single one-sided exchange.  Trailing shards whose ranges fall
+    past ``n_strips`` / ``nx * ny`` simply own nothing (their masks are
+    empty and they contribute zero to every psum)."""
+    n_shards = max(1, int(n_shards))
+    halo = int(nx) + 1
+    strips_per = -(-int(n_strips) // n_shards)
+    cells_per = max(-(-(int(nx) * int(ny)) // n_shards), halo)
+    return GraphShardSpec(n_shards=n_shards, strips_per_shard=strips_per,
+                          cells_per_shard=cells_per, halo_cells=halo)
 
 
 def _next_pow2(n: int, floor: int = 8) -> int:

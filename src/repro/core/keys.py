@@ -39,7 +39,7 @@ import numpy as np
 
 from repro.core.engine import ALL_METRICS, DEFAULT_IDEAL
 
-BACKENDS = ("fused", "eager", "kernels", "distributed")
+BACKENDS = ("fused", "eager", "kernels", "distributed", "graph_sharded")
 ORIENTATIONS = ("vertical", "horizontal", "both")
 PRECISIONS = ("float32", "bfloat16")
 VALIDATIONS = ("strict", "sanitize", "off")
@@ -125,7 +125,13 @@ class EvalConfig:
       single layouts via the strip-sharded
       :func:`repro.distributed.gridded.evaluate_sharded`, batches via
       the batch-axis-sharded
-      :func:`repro.distributed.batched.evaluate_layouts_sharded`.
+      :func:`repro.distributed.batched.evaluate_layouts_sharded`;
+    * ``"graph_sharded"`` — ONE layout spatially partitioned over a
+      1-D mesh (:func:`repro.distributed.graph_sharded.evaluate_graph_sharded`):
+      contiguous strip/cell ranges per device, one halo exchange for
+      boundary occlusion cells, psum totals — the million-vertex
+      single-graph path (routed through the serving session, which
+      degrades to ``"fused"`` on mesh loss).
 
     ``validation`` selects the request-checking mode of the fault
     tolerance layer (:mod:`repro.core.validate`): ``"strict"``
@@ -135,8 +141,9 @@ class EvalConfig:
     ``"sanitize"`` repairs them (drop-and-flag), ``"off"`` skips the
     checks entirely (see ``docs/robustness.md``).
 
-    ``shards`` bounds how many devices the ``"distributed"`` backend's
-    mesh uses (``None`` = every visible device; values above the device
+    ``shards`` bounds how many devices the ``"distributed"`` and
+    ``"graph_sharded"`` backends' meshes use (``None`` = every visible
+    device; values above the device
     count are clamped).  It is part of the config — and so of the digest
     and every cache key — because the mesh shape changes the compiled
     program, even though per-layout *results* are shard-count invariant

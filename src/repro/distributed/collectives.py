@@ -10,6 +10,14 @@ GSPMD-auto versions; compared in EXPERIMENTS.md §Perf).
   lookup: each device resolves ids that fall in its row range and psums
   the (batch, dim) partials — O(batch x dim) traffic instead of the
   table all-gather a naive gather can degrade to.
+
+* ``halo_exchange`` — the graph-sharded engine's ONE collective beyond
+  final psums: each device receives the leading slab of its ring
+  successor's arrays (boundary-cell buckets).  Bumps the
+  ``halo_exchanges`` work counter in :data:`repro.core.grid.CALL_COUNTS`
+  once per *trace*, which is how the tests and ``fig4_scaling --smoke``
+  certify exactly one exchange per evaluation (zero for strip-only
+  metric subsets, which never call this).
 """
 
 from __future__ import annotations
@@ -57,6 +65,25 @@ def merge_decode_attention(mesh: Mesh, q, k_cache, v_cache, pos, *,
         out_specs=P(),
         check_vma=False)
     return fn(q, k_cache, v_cache, pos)
+
+
+def halo_exchange(slabs, axis_name):
+    """Receive each array's slab from the ring successor (``i + 1``).
+
+    ``slabs`` is a pytree of same-leading-shape arrays — the caller's
+    boundary-cell bucket rows.  Must run inside ``shard_map`` over
+    ``axis_name``.  One ``ppermute`` per leaf, all the same pattern; the
+    wrap-around slab (device ``n-1`` receives device 0's) is the
+    caller's to mask — the graph-sharded sweep kills it with its
+    global-cell-id bound.  On a 1-device mesh the permutation is the
+    identity (the caller's mask makes the self-halo inert).
+    """
+    from repro.core import grid as gridlib
+    gridlib.CALL_COUNTS["halo_exchanges"] += 1
+    n = lax.psum(1, axis_name)
+    perm = [((i + 1) % n, i) for i in range(n)]
+    return jax.tree_util.tree_map(
+        lambda a: lax.ppermute(a, axis_name, perm), slabs)
 
 
 def sharded_embedding_lookup(mesh: Mesh, table, ids, *,

@@ -23,6 +23,7 @@ from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.core.engine import fused_reversal_block
 from repro.core.grid import SegmentBuckets
+from repro.core.validate import BackendUnavailableError, ReadabilityError
 from repro.distributed.compat import shard_map
 
 
@@ -77,8 +78,18 @@ def sharded_reversal_stats(mesh: Mesh, buckets: SegmentBuckets, *,
         shard_fn, mesh=mesh,
         in_specs=(P(axes), P(axes), P(axes), P(axes), P(axes), P(axes)),
         out_specs=(P(), P()), check_vma=False)
-    count, dev_sum = jax.jit(fn)(buckets.yl, buckets.yr, buckets.theta,
-                                 buckets.v, buckets.u, buckets.valid)
+    try:
+        count, dev_sum = jax.jit(fn)(buckets.yl, buckets.yr, buckets.theta,
+                                     buckets.v, buckets.u, buckets.valid)
+    except ReadabilityError:
+        raise
+    except Exception as err:
+        # typed error for the degradation ladders (session / server):
+        # a raw XLA runtime error from a lost mesh is not catchable by
+        # design — BackendUnavailableError with the original chained is
+        raise BackendUnavailableError(
+            f"strip-sharded reversal dispatch over {mesh.size} devices "
+            f"failed: {type(err).__name__}: {err}", request_index=0) from err
     if want_angle:
         return count, dev_sum
     return (count,)

@@ -29,11 +29,31 @@ from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.core.geometry import (pair_dist_sq, segments_cross,
                                  segments_cross_bool)
+from repro.core.validate import BackendUnavailableError, ReadabilityError
 from repro.distributed.compat import shard_map
 
 
 def _flat_axes(mesh: Mesh):
     return tuple(mesh.axis_names)
+
+
+def _run_sharded(tag, mesh, fn, *args):
+    """Execute a mesh dispatch behind the typed error taxonomy.
+
+    A failed shard_map launch (device lost, XLA runtime error,
+    incompatible mesh) used to surface as whatever raw exception the
+    runtime threw — callers holding ``except ReadabilityError`` ladders
+    (the session, the server) couldn't degrade on it.  One typed
+    :class:`~repro.core.validate.BackendUnavailableError`, original
+    chained; already-typed errors pass through untouched."""
+    try:
+        return fn(*args)
+    except ReadabilityError:
+        raise
+    except Exception as err:
+        raise BackendUnavailableError(
+            f"{tag} dispatch over {mesh.size} devices failed: "
+            f"{type(err).__name__}: {err}", request_index=0) from err
 
 
 def _pad_rows(arr, n_pad, fill):
@@ -82,8 +102,10 @@ def sharded_occlusion_count(mesh: Mesh, pos, radius, *, valid=None,
         in_specs=(P(axes), P(axes), P(axes), P(), P(), P()),
         out_specs=P(), check_vma=False)
     # row shards keep a leading (1, rows_per) block inside shard_map
-    return jax.jit(fn)(x.reshape(n_dev, rows_per), y.reshape(n_dev, rows_per),
-                       ok.reshape(n_dev, rows_per), x, y, ok)
+    return _run_sharded(
+        "row-sharded occlusion", mesh, jax.jit(fn),
+        x.reshape(n_dev, rows_per), y.reshape(n_dev, rows_per),
+        ok.reshape(n_dev, rows_per), x, y, ok)
 
 
 def ring_occlusion_count(mesh: Mesh, pos, radius, *, valid=None):
@@ -128,8 +150,10 @@ def ring_occlusion_count(mesh: Mesh, pos, radius, *, valid=None):
 
     fn = shard_map(shard_fn, mesh=mesh,
                        in_specs=(P(axes), P(axes), P(axes)), out_specs=P(), check_vma=False)
-    return jax.jit(fn)(x.reshape(n_dev, per), y.reshape(n_dev, per),
-                       ok.reshape(n_dev, per))
+    return _run_sharded(
+        "ring-streamed occlusion", mesh, jax.jit(fn),
+        x.reshape(n_dev, per), y.reshape(n_dev, per),
+        ok.reshape(n_dev, per))
 
 
 def _permute(arr, axes, perm):
@@ -193,7 +217,8 @@ def sharded_crossing_count(mesh: Mesh, pos, edges, *, edge_valid=None,
                        in_specs=(tuple(P(axes) for _ in sharded),
                                  tuple(P() for _ in rep)),
                        out_specs=P(), check_vma=False)
-    return jax.jit(fn)(sharded, rep)
+    return _run_sharded("row-sharded crossing", mesh, jax.jit(fn),
+                        sharded, rep)
 
 
 # ---------------------------------------------------------------------------

@@ -60,7 +60,10 @@ taxonomy):
   shard_map error) falls back distributed -> fused single-host in the
   same dispatch (results stay bit-identical on integer metrics), marks
   the mesh lost so later traffic skips it, and counts
-  ``degraded_dispatches``.  :meth:`EvalSession.health` is the
+  ``degraded_dispatches``.  The same ladder serves
+  ``backend="graph_sharded"`` (one layout spatially partitioned over
+  the mesh, ``graph_sharded_dispatches`` counter): on any mesh failure
+  the dispatch re-runs on the single-host fused engine.  :meth:`EvalSession.health` is the
   operational snapshot; :meth:`EvalSession.restore_mesh` re-arms a
   repaired mesh.
 
@@ -178,11 +181,22 @@ class EvalSession:
                 "source of truth shared with the engine and the plan cache")
             config = EvalConfig.from_legacy(**legacy_kwargs)
         self.config = config if config is not None else EvalConfig()
-        if self.config.backend not in ("fused", "kernels"):
+        if self.config.backend not in ("fused", "kernels", "graph_sharded"):
             raise ValueError(
                 "EvalSession serves the jitted engine; backend must be "
-                f"'fused' or 'kernels', got {self.config.backend!r} "
+                "'fused', 'kernels' or 'graph_sharded', got "
+                f"{self.config.backend!r} "
                 "(use repro.api.Evaluator for the other backends)")
+        if self.config.backend == "graph_sharded" and mesh is None:
+            # graph_sharded NEEDS a mesh (it is what the backend means);
+            # default to every visible device, capped by config.shards
+            import jax
+            from repro.distributed.compat import make_mesh
+            devices = jax.devices()
+            n = len(devices)
+            if self.config.shards is not None:
+                n = min(n, self.config.shards)
+            mesh = make_mesh((n,), ("graph",), devices=devices[:n])
         self.vertex_floor = int(vertex_floor)
         self.edge_floor = int(edge_floor)
         self.max_coalesce = int(max_coalesce)
@@ -204,6 +218,7 @@ class EvalSession:
         self._stats = {
             "requests": 0, "dispatches": 0, "coalesced": 0,
             "replans": 0, "traces": 0, "sharded_dispatches": 0,
+            "graph_sharded_dispatches": 0,
             "quarantined": 0, "sanitized": 0, "dispatch_failures": 0,
             "chunk_splits": 0, "degraded_dispatches": 0, "saturated": 0,
         }
@@ -226,7 +241,10 @@ class EvalSession:
             "status": "degraded" if degraded else "ok",
             "backend": self.config.backend,
             "validation": self.config.validation,
-            "dispatch_mode": ("sharded" if self.mesh is not None
+            "dispatch_mode": ("graph_sharded"
+                              if self.config.backend == "graph_sharded"
+                              and self.mesh is not None and self._mesh_ok
+                              else "sharded" if self.mesh is not None
                               and self.mesh.size > 1 and self._mesh_ok
                               else "single-host"),
             "mesh": (None if self.mesh is None else
@@ -293,6 +311,31 @@ class EvalSession:
         n_v = np.int32(chunk[0]["n_v"])
         n_e = np.int32(chunk[0]["n_e"])
         use_kernels = self.config.use_kernels
+        if (self.config.backend == "graph_sharded" and self.mesh is not None
+                and self._mesh_ok):
+            # top rung: each layout spatially partitioned over the mesh
+            # (a chunk dispatches one driver call per member — the graph
+            # axis, not the batch axis, is what's sharded here).  Any
+            # failure drops to the fused single-host rungs below, which
+            # are bit-identical on integer metrics.
+            from repro.distributed.graph_sharded import \
+                evaluate_graph_sharded
+            try:
+                faults.check_sharded()
+                results = [evaluate_graph_sharded(
+                    self.mesh, plan, c["pos_p"], c["edges_p"],
+                    n_valid_vertices=n_v, n_valid_edges=n_e)
+                    for c in chunk]
+                self._stats["graph_sharded_dispatches"] += len(chunk)
+                if len(chunk) > 1:
+                    self._stats["coalesced"] += len(chunk)
+                reports = [scores_from_result(r, int(n_v), int(n_e))
+                           for r in results]
+                self._stats["traces"] += engine.trace_count() - t0
+                return faults.storm_overflow(reports)
+            except Exception:
+                self._mesh_ok = False
+                self._stats["degraded_dispatches"] += 1
         if len(chunk) == 1:
             res = engine.evaluate_planned(
                 plan, chunk[0]["pos_p"], chunk[0]["edges_p"], n_v, n_e,

@@ -1,10 +1,11 @@
 """The cross-backend differential parity matrix — ONE source of truth.
 
 Every backend of the public :class:`repro.api.Evaluator` contract
-(``fused``, ``eager``, ``kernels``, ``distributed``, and the
-mesh-sharded *batched* route of ``distributed``) evaluates the same
-fixture layouts, and every cell of the matrix is held to the same
-documented guarantee (docs/backends.md):
+(``fused``, ``eager``, ``kernels``, ``distributed``, the mesh-sharded
+*batched* route of ``distributed``, and the spatially partitioned
+``graph_sharded``) evaluates the same fixture layouts, and every cell
+of the matrix is held to the same documented guarantee
+(docs/backends.md):
 
 * integer metrics (``N_c``, ``E_c``, ``crossing_count_for_angle``) are
   **bit-identical** across all backends;
@@ -36,7 +37,8 @@ N_STRIPS = 32
 # the documented cross-backend float tolerance (docs/backends.md)
 RTOL = 1e-5
 
-BACKENDS = ("fused", "eager", "kernels", "distributed", "sharded_batched")
+BACKENDS = ("fused", "eager", "kernels", "distributed", "sharded_batched",
+            "graph_sharded")
 FAMILIES = ("random", "grid", "cluster", "collinear", "duplicate")
 
 INT_FIELDS = ("node_occlusion", "edge_crossing", "crossing_count_for_angle")
@@ -164,11 +166,12 @@ def test_collinear_has_zero_crossings(family):
 
 
 def test_matrix_covers_contract():
-    """The matrix IS the acceptance criterion: all 5 backends, >= 4
+    """The matrix IS the acceptance criterion: all 6 backends, >= 4
     layout families (we run 5, incl. the degenerate pair)."""
-    assert len(BACKENDS) == 5
+    assert len(BACKENDS) == 6
     assert len(FAMILIES) >= 4
     assert {"collinear", "duplicate"} <= set(FAMILIES)
+    assert "graph_sharded" in BACKENDS
 
 
 def test_distributed_cells_see_forced_devices():
