@@ -32,6 +32,16 @@ zero-replan / zero-retrace steady state to survive with the layer on.
 ``--validation-gate`` runs only this section (the CI chaos leg's cost
 gate) and merges it into an existing BENCH_serve.json.
 
+The ``overload`` section prices admission control: the same |V|=1k
+burst served uncontended (burst == capacity) vs at 2x offered load on a
+``max_queue``-bounded session (the excess is shed with
+``OverloadedError``), rounds interleaved.  The acceptance gate requires
+goodput under 2x overload >= 80% of uncontended capacity, admitted p95
+latency within 2x the uncontended p95, deterministic shedding of
+exactly the excess, and a clean (zero-replan / zero-retrace /
+zero-expiry) admitted steady state.  ``--overload-gate`` runs only this
+section and merges it into an existing BENCH_serve.json.
+
 Writes BENCH_serve.json next to the repo root (the serving perf record).
 
   PYTHONPATH=src python benchmarks/serve_bench.py
@@ -142,6 +152,88 @@ def validation_overhead(base, graphs, rng):
     return section
 
 
+OVERLOAD_BURST = 16      # uncontended burst == steady-state capacity
+OVERLOAD_FACTOR = 2      # offered load under overload: factor * burst
+
+
+def overload_section(base, graphs, rng):
+    """Price the bounded queue: uncontended bursts of OVERLOAD_BURST
+    requests vs 2x-offered-load bursts against a ``max_queue``-bounded
+    session, rounds interleaved (drift hits both equally).  Admitted
+    requests carry a generous deadline, so the watchdog guard's cost is
+    inside the measured latency too."""
+    n = max(k for k in graphs)
+    pos, edges = graphs[n]
+    cap_srv = ReadabilityServer(base)
+    over_srv = ReadabilityServer(base, max_queue=OVERLOAD_BURST,
+                                 default_deadline=120.0)
+
+    def burst(server, B):
+        return server.evaluate_batch(
+            [(perturbed(pos, rng, n), edges) for _ in range(B)])
+
+    offered = OVERLOAD_FACTOR * OVERLOAD_BURST
+    for _ in range(WARMUP_ROUNDS):
+        burst(cap_srv, OVERLOAD_BURST)
+        burst(over_srv, offered)
+    before = dict(over_srv.stats)
+    cap_times, over_times = [], []
+    shed_per_round, bad = [], 0
+    for _ in range(TIMED_ROUNDS):
+        t0 = time.perf_counter()
+        burst(cap_srv, OVERLOAD_BURST)
+        cap_times.append(time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        out = burst(over_srv, offered)
+        over_times.append(time.perf_counter() - t0)
+        shed_per_round.append(sum(r.shed for r in out))
+        bad += sum(1 for r in out if not (r.ok or r.shed))
+    after = dict(over_srv.stats)
+    delta = {k: after[k] - before[k] for k in
+             ("replans", "traces", "plan_misses", "shed", "expired",
+              "cancelled", "watchdog_abandoned", "quarantined",
+              "dispatch_failures")}
+
+    # every request in a burst completes when the burst does, so the
+    # per-admitted-request latency IS the burst wall time
+    capacity_rps = OVERLOAD_BURST * TIMED_ROUNDS / sum(cap_times)
+    goodput_rps = (offered * TIMED_ROUNDS - sum(shed_per_round)) \
+        / sum(over_times)
+    p95_cap = float(np.percentile(cap_times, 95)) * 1e3
+    p95_adm = float(np.percentile(over_times, 95)) * 1e3
+    section = {
+        "n_vertices": n, "burst": OVERLOAD_BURST, "offered": offered,
+        "capacity_rps": capacity_rps, "goodput_rps": goodput_rps,
+        "goodput_fraction": goodput_rps / capacity_rps,
+        "uncontended_p95_ms": p95_cap, "admitted_p95_ms": p95_adm,
+        "admitted_p95_ratio": p95_adm / p95_cap,
+        "shed_per_round": shed_per_round,
+        "steady_state_counters": delta,
+        "queue_high_watermark": after["queue_high_watermark"],
+    }
+    excess = offered - OVERLOAD_BURST
+    section["acceptance"] = {
+        "goodput_ge_80pct_capacity": goodput_rps >= 0.8 * capacity_rps,
+        "admitted_p95_within_2x_uncontended": p95_adm <= 2.0 * p95_cap,
+        "sheds_exactly_the_excess": all(s == excess
+                                        for s in shed_per_round),
+        "admitted_steady_state_clean": (
+            bad == 0 and all(delta[k] == 0 for k in
+                             ("replans", "traces", "plan_misses",
+                              "expired", "watchdog_abandoned",
+                              "quarantined", "dispatch_failures"))),
+        "queue_never_exceeds_bound": (after["queue_high_watermark"]
+                                      <= OVERLOAD_BURST),
+    }
+    print(f"overload |V|={n}: capacity {capacity_rps:.1f} req/s, "
+          f"goodput at {OVERLOAD_FACTOR}x load {goodput_rps:.1f} req/s "
+          f"({section['goodput_fraction'] * 100:.0f}%), admitted p95 "
+          f"{p95_adm:.0f} ms vs {p95_cap:.0f} ms uncontended "
+          f"({section['admitted_p95_ratio']:.2f}x)")
+    print("overload acceptance:", section["acceptance"])
+    return section
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--config", default="{}",
@@ -151,6 +243,11 @@ def main(argv=None):
                     help="run only the validation_overhead section (the "
                          "CI cost gate on the fault-tolerance layer) and "
                          "merge it into BENCH_serve.json")
+    ap.add_argument("--overload-gate", action="store_true",
+                    help="run only the overload section (the CI gate on "
+                         "admission control: goodput and admitted-p95 "
+                         "under 2x offered load) and merge it into "
+                         "BENCH_serve.json")
     args = ap.parse_args(argv)
     overrides = json.loads(args.config)
     if "metrics" in overrides:
@@ -166,18 +263,24 @@ def main(argv=None):
     val_sizes = tuple(n for n in SIZES if n <= 1000) or SIZES[:1]
     val_graphs = {n: (np.asarray(p), np.asarray(e)) for n, (p, e) in
                   ((n, make_graph(n)) for n in val_sizes)}
-    if args.validation_gate:
-        section = validation_overhead(base, val_graphs,
-                                      np.random.default_rng(0))
+    if args.validation_gate or args.overload_gate:
+        sections = {}
+        if args.validation_gate:
+            sections["validation_overhead"] = validation_overhead(
+                base, val_graphs, np.random.default_rng(0))
+        if args.overload_gate:
+            sections["overload"] = overload_section(
+                base, val_graphs, np.random.default_rng(2))
         prior = {}
         if os.path.exists(out):
             with open(out) as f:
                 prior = json.load(f)
-        prior["validation_overhead"] = section
+        prior.update(sections)
         with open(out, "w") as f:
             json.dump(prior, f, indent=2)
         print(f"wrote {out}")
-        if not all(section["acceptance"].values()):
+        if not all(ok for s in sections.values()
+                   for ok in s["acceptance"].values()):
             sys.exit(1)
         return
 
@@ -250,6 +353,8 @@ def main(argv=None):
 
     results["validation_overhead"] = validation_overhead(
         base, val_graphs, np.random.default_rng(1))
+    results["overload"] = overload_section(
+        base, val_graphs, np.random.default_rng(2))
 
     by_size = {r["n_vertices"]: r for r in results["sizes"]}
     results["acceptance"] = {
@@ -259,6 +364,8 @@ def main(argv=None):
         "zero_plan_misses_after_warmup": delta["plan_misses"] == 0,
         "stream_coalesces": delta["coalesced"] == delta["requests"],
         **results["validation_overhead"]["acceptance"],
+        **{f"overload_{k}": v
+           for k, v in results["overload"]["acceptance"].items()},
     }
     with open(out, "w") as f:
         json.dump(results, f, indent=2)

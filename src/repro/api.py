@@ -52,18 +52,21 @@ from repro.core.metrics import evaluate_exact  # noqa: F401  (re-export)
 from repro.core.scores import (ReadabilityScores,  # noqa: F401
                                scores_from_batch, scores_from_result)
 from repro.core.validate import (BackendUnavailableError,  # noqa: F401
-                                 CapacityError, InvalidInputError,
-                                 ReadabilityError, validate_batch,
-                                 validate_request)
+                                 CancelledError, CapacityError,
+                                 DeadlineExceededError, InvalidInputError,
+                                 OverloadedError, ReadabilityError,
+                                 validate_batch, validate_request)
+from repro.launch.admission import CancelToken  # noqa: F401  (re-export)
 from repro.launch.session import EvalSession
 
 __all__ = [
-    "ALL_METRICS", "BackendUnavailableError", "CapacityError", "EvalConfig",
-    "EvalSession", "Evaluator", "InvalidInputError", "ReadabilityError",
-    "ReadabilityScores", "evaluate_exact", "evaluator_for",
-    "pow2_bucket", "pow2_chunks", "reset_deprecation_warnings",
-    "scores_from_batch", "scores_from_result", "topology_hash",
-    "validate_batch", "validate_request",
+    "ALL_METRICS", "BackendUnavailableError", "CancelToken",
+    "CancelledError", "CapacityError", "DeadlineExceededError", "EvalConfig",
+    "EvalSession", "Evaluator", "InvalidInputError", "OverloadedError",
+    "ReadabilityError", "ReadabilityScores", "evaluate_exact",
+    "evaluator_for", "pow2_bucket", "pow2_chunks",
+    "reset_deprecation_warnings", "scores_from_batch", "scores_from_result",
+    "topology_hash", "validate_batch", "validate_request",
 ]
 
 
@@ -136,13 +139,11 @@ class Evaluator:
 
     def _mesh(self):
         if self.mesh is None:
-            import jax
-            from repro.distributed.compat import make_mesh
-            devices = jax.devices()
-            n = len(devices)
-            if self.config.shards is not None:
-                n = min(self.config.shards, n)
-            self.mesh = make_mesh((n,), ("eval",), devices=devices[:n])
+            # one bring-up policy for every serving-side mesh (shared
+            # with EvalSession's graph_sharded default): visible devices,
+            # capped by config.shards, pow2-trimmed
+            from repro.launch.elastic import serving_mesh
+            self.mesh = serving_mesh("eval", shards=self.config.shards)
         return self.mesh
 
     # -- evaluation ---------------------------------------------------------

@@ -89,6 +89,29 @@ class ReadabilityScores(NamedTuple):
         replan retries (sanitize mode; counts may be under-reported)."""
         return bool(self.flags) and bool(self.flags.get("saturated"))
 
+    @property
+    def shed(self) -> bool:
+        """True when admission control shed this request (the bounded
+        queue was full / over budget — ``error`` is the typed
+        :class:`~repro.core.validate.OverloadedError`)."""
+        from repro.core.validate import OverloadedError
+        return isinstance(self.error, OverloadedError)
+
+    @property
+    def expired(self) -> bool:
+        """True when the request's deadline passed before its dispatch
+        completed (``error`` is
+        :class:`~repro.core.validate.DeadlineExceededError`)."""
+        from repro.core.validate import DeadlineExceededError
+        return isinstance(self.error, DeadlineExceededError)
+
+    @property
+    def cancelled(self) -> bool:
+        """True when the request's cancel token fired before dispatch
+        (``error`` is :class:`~repro.core.validate.CancelledError`)."""
+        from repro.core.validate import CancelledError
+        return isinstance(self.error, CancelledError)
+
     def raise_for_error(self) -> "ReadabilityScores":
         """Raise the quarantined error, if any; else return self."""
         if self.error is not None:

@@ -24,6 +24,17 @@ the engine.
   failed to dispatch (mesh lost, shard_map error); the degradation
   ladder in :class:`repro.launch.session.EvalSession` falls back to the
   single-host fused engine before this ever reaches a caller.
+* :class:`OverloadedError` — admission control shed the request: the
+  bounded queue in front of coalescing was full (or over its cost
+  budget) and this request lost the deterministic
+  oldest-deadline-first shed ordering
+  (:mod:`repro.launch.admission`).
+* :class:`DeadlineExceededError` — the request's deadline passed
+  before its dispatch completed (expired while queued, or its dispatch
+  hung past the wall-clock guard and was abandoned by the watchdog).
+* :class:`CancelledError` — the request's
+  :class:`~repro.launch.admission.CancelToken` was cancelled before
+  the request dispatched.
 
 **Validation modes** (``EvalConfig.validation``):
 
@@ -104,6 +115,43 @@ class BackendUnavailableError(ReadabilityError):
     device failure).  The serving session degrades distributed -> fused
     single-host on this instead of surfacing it; direct backend callers
     see it raised with the original failure chained."""
+
+
+class OverloadedError(ReadabilityError):
+    """Admission control shed this request: the bounded queue in front
+    of coalescing (:mod:`repro.launch.admission`) was full or over its
+    cost budget.  Shedding is deterministic (oldest-deadline-first, ties
+    broken latest-arrival-first), so the same arrival sequence always
+    sheds the same request set.  ``queue_depth`` is how many requests
+    were competing for admission, ``bound`` the limit that was hit."""
+
+    def __init__(self, message: str, *, request_index: Optional[int] = None,
+                 queue_depth: Optional[int] = None,
+                 bound: Optional[int] = None):
+        super().__init__(message, request_index=request_index)
+        self.queue_depth = queue_depth
+        self.bound = bound
+
+
+class DeadlineExceededError(ReadabilityError):
+    """The request's deadline passed before its evaluation completed:
+    it expired while queued behind earlier dispatches, or its own
+    dispatch hung past the wall-clock guard and was abandoned by the
+    watchdog (the hung program cannot be interrupted, but it no longer
+    blocks the queue — every coalesced neighbour keeps draining).
+    ``elapsed`` is wall-clock seconds since the request arrived, when
+    known."""
+
+    def __init__(self, message: str, *, request_index: Optional[int] = None,
+                 elapsed: Optional[float] = None):
+        super().__init__(message, request_index=request_index)
+        self.elapsed = None if elapsed is None else float(elapsed)
+
+
+class CancelledError(ReadabilityError):
+    """The request's :class:`~repro.launch.admission.CancelToken` was
+    cancelled before the request dispatched; the slot fails without any
+    engine work."""
 
 
 # ---------------------------------------------------------------------------

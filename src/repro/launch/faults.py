@@ -1,12 +1,14 @@
 """Deterministic fault injection for the serving layer (chaos harness).
 
 A fault story is only trustworthy if it is *testable*: the chaos suite
-(``tests/test_faults.py``) must be able to make the Nth dispatch fail,
-poison exactly one request of a coalesced batch, take the mesh away
-mid-stream, or keep capacities overflowing forever — deterministically,
-with no monkeypatching of library internals.  :class:`FaultPlan` is that
-knob: a context manager that arms a process-global plan which the
-serving session consults at fixed hook points:
+(``tests/test_faults.py`` / ``tests/test_overload.py``) must be able to
+make the Nth dispatch fail, slow down, or hang, poison exactly one
+request of a coalesced batch, take the mesh away mid-stream, reject a
+breaker probe, or keep capacities overflowing forever —
+deterministically, with no monkeypatching of library internals.
+:class:`FaultPlan` is that knob: a context manager that arms a
+process-global plan which the serving session consults at fixed hook
+points:
 
 * ``corrupt_request`` — called once per request entering
   :meth:`EvalSession.evaluate_batch` (by arrival ordinal while the plan
@@ -14,19 +16,39 @@ serving session consults at fixed hook points:
   *before* validation, so the harness proves the validation layer (not
   test plumbing) catches the poison.
 * ``check_dispatch`` — called at the top of every engine dispatch;
-  selected ordinals raise :class:`FaultInjected` (a generic
+  ``fail_dispatches`` ordinals raise :class:`FaultInjected` (a generic
   infrastructure failure: the session must split the chunk and retry
-  members individually).
+  members individually); ``slow_dispatches`` ordinals sleep
+  ``slow_seconds`` first (a straggler: queued neighbours' deadlines
+  keep ticking); ``hang_dispatches`` ordinals block until the watchdog
+  abandons the dispatch (or ``hang_seconds`` elapses as a safety
+  bound), then raise :class:`FaultInjected` — the session must fail
+  only the hung chunk's slots with ``DeadlineExceededError`` while the
+  queue keeps draining.
 * ``check_sharded`` — called before every mesh-sharded dispatch;
   selected ordinals raise
   :class:`~repro.core.validate.BackendUnavailableError` (simulated mesh
-  loss: the session must degrade distributed -> fused single-host).
+  loss: the session's breaker must open and serve fused single-host).
+* ``check_probe`` — called before every breaker *canary probe*
+  (half-open mesh re-probe); selected ordinals raise
+  ``BackendUnavailableError`` (the probe fails: the breaker must
+  re-open and keep serving fused).
 * ``storm_overflow`` — applied to every dispatch result while armed;
   forces the ``overflow`` counter positive so the replan loop can never
   converge (the session must stop at ``max_replan_retries`` and surface
   :class:`~repro.core.validate.CapacityError` / a ``saturated`` flag).
 
 All ordinals are 0-based and counted from the moment the plan is armed.
+Ordinal assignment is **thread-safe** (one lock-guarded bump per hook):
+the watchdog runs guarded dispatches on worker threads, so two
+dispatches can consult the plan concurrently and each must still get a
+unique ordinal.  The idle fast path stays a single allocation-free
+``is None`` check.  A dispatch abandoned by the watchdog keeps its
+already-assigned ordinals (determinism is per-assignment, not
+per-completion), and an abandoned injected hang raises
+:class:`FaultInjected` into the discarded worker instead of running the
+engine.
+
 The plan records what it actually injected in :attr:`FaultPlan.injected`
 so tests can assert the fault fired (a chaos test whose fault never
 triggers is vacuous).  Hooks are no-ops (one global ``is None`` check)
@@ -34,6 +56,9 @@ when no plan is armed — the steady-state serving path pays nothing.
 """
 
 from __future__ import annotations
+
+import threading
+import time
 
 import numpy as np
 
@@ -77,23 +102,61 @@ class FaultPlan:
       NaN before validation sees them.
     * ``fail_dispatches`` — raise :class:`FaultInjected` on these engine
       dispatch ordinals.
+    * ``slow_dispatches`` — sleep ``slow_seconds`` (default 0.05) at the
+      top of these dispatch ordinals (an injected straggler).
+    * ``hang_dispatches`` — block these dispatch ordinals until the
+      watchdog abandons them (``release_hangs``) or the plan disarms,
+      with ``hang_seconds`` (default 20.0) as the safety bound; then
+      raise :class:`FaultInjected` into the (discarded) worker.  Note:
+      abandoning sets the plan-wide release event, so later hang
+      ordinals in the SAME plan release immediately — use one hang per
+      plan for precise timing.
     * ``mesh_loss_dispatches`` — raise ``BackendUnavailableError`` on
       these *sharded* dispatch ordinals (simulated mesh loss).
+    * ``reject_probes`` — raise ``BackendUnavailableError`` on these
+      breaker canary-probe ordinals (the half-open re-probe fails).
     * ``overflow_storms`` — force ``overflow > 0`` on these dispatch
       results (``True`` = every dispatch: the replan loop can never
       converge).
     """
 
     def __init__(self, *, nan_requests=None, fail_dispatches=None,
-                 mesh_loss_dispatches=None, overflow_storms=None):
+                 mesh_loss_dispatches=None, overflow_storms=None,
+                 slow_dispatches=None, hang_dispatches=None,
+                 reject_probes=None, slow_seconds: float = 0.05,
+                 hang_seconds: float = 20.0):
         self.nan_requests = _ordinals(nan_requests)
         self.fail_dispatches = _ordinals(fail_dispatches)
         self.mesh_loss_dispatches = _ordinals(mesh_loss_dispatches)
         self.overflow_storms = _ordinals(overflow_storms)
+        self.slow_dispatches = _ordinals(slow_dispatches)
+        self.hang_dispatches = _ordinals(hang_dispatches)
+        self.reject_probes = _ordinals(reject_probes)
+        self.slow_seconds = float(slow_seconds)
+        self.hang_seconds = float(hang_seconds)
         self._seen = {"requests": 0, "dispatches": 0, "sharded": 0,
-                      "storm_checks": 0}
+                      "storm_checks": 0, "probes": 0}
         self.injected = {"nan_requests": 0, "fail_dispatches": 0,
-                         "mesh_loss_dispatches": 0, "overflow_storms": 0}
+                         "mesh_loss_dispatches": 0, "overflow_storms": 0,
+                         "slow_dispatches": 0, "hang_dispatches": 0,
+                         "reject_probes": 0}
+        # ordinal bumps happen under this lock: the watchdog dispatches
+        # on worker threads, and two concurrent hooks must never share
+        # an ordinal (the injected-counter bumps ride the same lock)
+        self._lock = threading.Lock()
+        # set by release_hangs() (watchdog abandonment) or __exit__, so
+        # injected hangs never outlive the plan by more than a tick
+        self._release = threading.Event()
+
+    def _next(self, site: str) -> int:
+        with self._lock:
+            ordinal = self._seen[site]
+            self._seen[site] = ordinal + 1
+            return ordinal
+
+    def _bump(self, key: str) -> None:
+        with self._lock:
+            self.injected[key] += 1
 
     def __enter__(self):
         global _ACTIVE
@@ -106,6 +169,7 @@ class FaultPlan:
     def __exit__(self, *exc):
         global _ACTIVE
         _ACTIVE = None
+        self._release.set()
         return False
 
 
@@ -124,26 +188,34 @@ def corrupt_request(pos):
     p = _ACTIVE
     if p is None:
         return pos
-    ordinal = p._seen["requests"]
-    p._seen["requests"] += 1
+    ordinal = p._next("requests")
     if not _hit(p.nan_requests, ordinal):
         return pos
-    p.injected["nan_requests"] += 1
+    p._bump("nan_requests")
     bad = np.array(pos, np.float32, copy=True)
     bad[0 if bad.ndim == 2 else (0, 0)] = np.nan
     return bad
 
 
 def check_dispatch() -> None:
-    """Dispatch hook: raises :class:`FaultInjected` on selected
-    ordinals."""
+    """Dispatch hook: hangs, slows, or raises :class:`FaultInjected` on
+    selected ordinals."""
     p = _ACTIVE
     if p is None:
         return
-    ordinal = p._seen["dispatches"]
-    p._seen["dispatches"] += 1
+    ordinal = p._next("dispatches")
+    if _hit(p.hang_dispatches, ordinal):
+        p._bump("hang_dispatches")
+        # block until abandoned (release_hangs), the plan disarms, or
+        # the safety bound elapses — then fail the (discarded) worker
+        # instead of running the engine it was pretending to hang
+        p._release.wait(p.hang_seconds)
+        raise FaultInjected(f"injected hang released (ordinal {ordinal})")
+    if _hit(p.slow_dispatches, ordinal):
+        p._bump("slow_dispatches")
+        time.sleep(p.slow_seconds)
     if _hit(p.fail_dispatches, ordinal):
-        p.injected["fail_dispatches"] += 1
+        p._bump("fail_dispatches")
         raise FaultInjected(f"injected dispatch failure (ordinal {ordinal})")
 
 
@@ -153,12 +225,33 @@ def check_sharded() -> None:
     p = _ACTIVE
     if p is None:
         return
-    ordinal = p._seen["sharded"]
-    p._seen["sharded"] += 1
+    ordinal = p._next("sharded")
     if _hit(p.mesh_loss_dispatches, ordinal):
-        p.injected["mesh_loss_dispatches"] += 1
+        p._bump("mesh_loss_dispatches")
         raise BackendUnavailableError(
             f"injected mesh loss (sharded dispatch ordinal {ordinal})")
+
+
+def check_probe() -> None:
+    """Breaker canary-probe hook: raises ``BackendUnavailableError`` on
+    selected probe ordinals (the half-open re-probe fails and the
+    circuit must re-open)."""
+    p = _ACTIVE
+    if p is None:
+        return
+    ordinal = p._next("probes")
+    if _hit(p.reject_probes, ordinal):
+        p._bump("reject_probes")
+        raise BackendUnavailableError(
+            f"injected probe rejection (probe ordinal {ordinal})")
+
+
+def release_hangs() -> None:
+    """Watchdog hook: un-block any injected hang so the abandoned worker
+    thread exits promptly instead of sleeping out ``hang_seconds``."""
+    p = _ACTIVE
+    if p is not None:
+        p._release.set()
 
 
 def storm_overflow(reports):
@@ -167,10 +260,9 @@ def storm_overflow(reports):
     p = _ACTIVE
     if p is None:
         return reports
-    ordinal = p._seen["storm_checks"]
-    p._seen["storm_checks"] += 1
+    ordinal = p._next("storm_checks")
     if not _hit(p.overflow_storms, ordinal):
         return reports
-    p.injected["overflow_storms"] += 1
+    p._bump("overflow_storms")
     return [r._replace(overflow=max(int(r.overflow or 0), 1))
             for r in reports]

@@ -50,13 +50,18 @@ class ReadabilityServer:
 
     ``ReadabilityServer(config)`` is the canonical constructor; the
     keyword knobs (``cache_size``, ``vertex_floor``, ``edge_floor``,
-    ``max_coalesce``) are serving policy.  Requests are (pos, edges)
-    pairs.
+    ``max_coalesce``, plus the overload knobs ``max_queue``,
+    ``max_queue_cost``, ``default_deadline``, ``dispatch_timeout``,
+    ``probe_interval`` — see :class:`EvalSession`) are serving policy.
+    Requests are (pos, edges) pairs.
     """
 
     def __init__(self, config: EvalConfig = None, *, method: str = None,
                  cache_size: int = 128, vertex_floor: int = 128,
                  edge_floor: int = 128, max_coalesce: int = 32,
+                 max_queue: int = None, max_queue_cost: int = None,
+                 default_deadline: float = None,
+                 dispatch_timeout: float = None, probe_interval: int = 8,
                  **legacy_kwargs):
         if isinstance(config, str):   # old positional method argument
             method, config = config, None
@@ -94,7 +99,12 @@ class ReadabilityServer:
         self.session = (EvalSession(self.config, cache_size=cache_size,
                                     vertex_floor=vertex_floor,
                                     edge_floor=edge_floor,
-                                    max_coalesce=max_coalesce)
+                                    max_coalesce=max_coalesce,
+                                    max_queue=max_queue,
+                                    max_queue_cost=max_queue_cost,
+                                    default_deadline=default_deadline,
+                                    dispatch_timeout=dispatch_timeout,
+                                    probe_interval=probe_interval)
                         if self.method == "session" else None)
         self._evaluator = None
         self._stats = {"requests": 0, "evals": 0}
@@ -133,11 +143,22 @@ class ReadabilityServer:
     def evaluate(self, pos, edges) -> ReadabilityScores:
         return self.evaluate_batch([(pos, edges)])[0]
 
-    def evaluate_batch(self, requests):
+    def evaluate_batch(self, requests, *, deadline=None, cancel=None):
+        """Evaluate a list of (pos, edges) requests.  ``deadline`` /
+        ``cancel`` ride through to
+        :meth:`EvalSession.evaluate_batch` (session-backed configs
+        only — the eager/exact paths have no queue to bound)."""
         self._stats["requests"] += len(requests)
         if self.session is not None:
-            reports = self.session.evaluate_batch(requests)
+            reports = self.session.evaluate_batch(requests,
+                                                  deadline=deadline,
+                                                  cancel=cancel)
         else:
+            if deadline is not None or cancel is not None:
+                raise ValueError(
+                    "deadline/cancel need the session-backed server "
+                    "(backend='fused'/'kernels'/'graph_sharded'); the "
+                    "eager and exact paths evaluate inline with no queue")
             reports = [
                 self._eager_evaluate(np.asarray(pos, np.float32),
                                      np.asarray(edges, np.int32))

@@ -10,6 +10,11 @@ of fused engine dispatches:
               mode = ``EvalConfig.validation``; a malformed request is
               QUARANTINED to its own slot here, before it can touch a
               coalesced batch)
+          --> admission control (:func:`repro.launch.admission.admit`,
+              the bounded queue: past ``max_queue`` / ``max_queue_cost``
+              the excess is SHED — oldest-deadline-first — with
+              :class:`~repro.core.validate.OverloadedError` in its own
+              slot, before any padding or planning is spent on it)
           --> pow2 shape buckets (V, E rounded up; one bucket function —
               :func:`repro.core.keys.pow2_bucket` — shared by the
               plan-cache key and the padding)
@@ -43,6 +48,29 @@ taxonomy):
   integer metrics to a run that never saw the poison.  The
   ``quarantined`` counter certifies it.  :meth:`EvalSession.evaluate`
   (single request) raises instead.
+* *Admission control* — ``max_queue`` / ``max_queue_cost`` bound the
+  work a burst may enqueue; the excess is shed deterministically
+  (oldest-deadline-first, ties latest-arrival-first — see
+  :func:`repro.launch.admission.admit`) with
+  :class:`~repro.core.validate.OverloadedError` in the shed slots only.
+  ``shed`` / ``queue_high_watermark`` certify it.  Unset bounds (the
+  default) keep the pre-admission behavior bit-for-bit.
+* *Deadlines* — per-request budgets (``default_deadline`` knob or the
+  ``deadline=`` argument).  Queued requests whose deadline passes are
+  reaped before their dispatch starts
+  (:class:`~repro.core.validate.DeadlineExceededError` in their own
+  slot, ``expired`` counter); cancelled
+  :class:`~repro.launch.admission.CancelToken`\\ s likewise
+  (``CancelledError``, ``cancelled`` counter).  No deadline (the
+  default) means no clock reads on the hot path.
+* *Hung-dispatch watchdog* — with a deadline or ``dispatch_timeout``
+  in force, every engine dispatch runs under a wall-clock guard on a
+  worker thread; a dispatch that exceeds its budget is ABANDONED
+  (``watchdog_abandoned`` counter) into the split-and-retry path, so a
+  wedged device call fails only its own chunk's slots with
+  ``DeadlineExceededError`` while the rest of the queue keeps
+  draining.  With neither in force, dispatch is direct (zero threads,
+  zero overhead) — the steady-state fast path is untouched.
 * *Dispatch splitting* — an exception out of a coalesced dispatch
   (injected or real) splits the chunk and retries members individually,
   so one bad interaction cannot fail B-1 innocent requests
@@ -56,16 +84,21 @@ taxonomy):
   ``saturated``-flagged score (sanitize) instead of silently
   under-counting (the pre-fault-layer behavior, kept under
   ``validation="off"``).
-* *Degradation ladder* — a mesh-sharded dispatch failure (mesh lost,
-  shard_map error) falls back distributed -> fused single-host in the
-  same dispatch (results stay bit-identical on integer metrics), marks
-  the mesh lost so later traffic skips it, and counts
-  ``degraded_dispatches``.  The same ladder serves
-  ``backend="graph_sharded"`` (one layout spatially partitioned over
-  the mesh, ``graph_sharded_dispatches`` counter): on any mesh failure
-  the dispatch re-runs on the single-host fused engine.  :meth:`EvalSession.health` is the
-  operational snapshot; :meth:`EvalSession.restore_mesh` re-arms a
-  repaired mesh.
+* *Self-healing degradation ladder* — a mesh-sharded dispatch failure
+  (mesh lost, shard_map error) falls back distributed -> fused
+  single-host in the same dispatch (results stay bit-identical on
+  integer metrics) and OPENS the session's
+  :class:`~repro.launch.admission.CircuitBreaker`; traffic serves
+  single-host while the breaker counts fused successes, goes
+  half-open after ``probe_interval`` of them, and the next
+  mesh-eligible dispatch is a CANARY PROBE — on success the circuit
+  closes and sharded serving auto-restores (``probes`` /
+  ``auto_restores`` counters), on failure it re-opens and the cycle
+  repeats.  The same ladder serves ``backend="graph_sharded"`` (one
+  layout spatially partitioned over the mesh,
+  ``graph_sharded_dispatches`` counter).  :meth:`EvalSession.health`
+  is the operational snapshot (``breaker_state`` included);
+  :meth:`EvalSession.restore_mesh` stays as the manual override.
 
 Padded tail vertices/edges are masked out on device via the engine's
 ``n_valid_vertices`` / ``n_valid_edges`` traced scalars, so every natural
@@ -87,6 +120,7 @@ deprecation shim mapping onto :class:`~repro.core.keys.EvalConfig`.
 
 from __future__ import annotations
 
+import threading
 from collections import OrderedDict
 
 import numpy as np
@@ -96,10 +130,12 @@ from repro.core.keys import (EvalConfig, pow2_bucket, pow2_chunks,
                              topology_hash, warn_once)
 from repro.core.scores import (error_scores, scores_from_batch,
                                scores_from_result)
-from repro.core.validate import (BackendUnavailableError, CapacityError,
-                                 InvalidInputError, ReadabilityError,
-                                 validate_request)
-from repro.launch import faults
+from repro.core.validate import (BackendUnavailableError, CancelledError,
+                                 CapacityError, DeadlineExceededError,
+                                 InvalidInputError, OverloadedError,
+                                 ReadabilityError, validate_request)
+from repro.launch import admission, faults
+from repro.launch.admission import CircuitBreaker
 
 # Park coordinate for padded tail vertices: far outside any real layout
 # extent.  Correctness rests on the n_valid masks, not on this value —
@@ -112,7 +148,9 @@ _pow2_chunks = pow2_chunks
 # EvalSession kwargs that are serving *policy*, not evaluation semantics
 # (they do not belong in EvalConfig and are not deprecated)
 _SESSION_KNOBS = ("cache_size", "vertex_floor", "edge_floor", "max_coalesce",
-                  "max_replan_retries", "replan_growth", "growth_ceiling")
+                  "max_replan_retries", "replan_growth", "growth_ceiling",
+                  "max_queue", "max_queue_cost", "default_deadline",
+                  "dispatch_timeout", "probe_interval")
 
 
 class PlanCache:
@@ -155,20 +193,40 @@ class PlanCache:
 
 class EvalSession:
     """Plan-caching, shape-bucketing, request-coalescing evaluator with
-    the fault-tolerance layer (quarantine, dispatch splitting, bounded
-    replan backoff, backend degradation — see the module docstring).
+    the fault-tolerance layer (quarantine, admission control, deadlines,
+    the hung-dispatch watchdog, dispatch splitting, bounded replan
+    backoff, self-healing backend degradation — see the module
+    docstring).
 
     ``EvalSession(config)`` is the canonical constructor; the keyword
     knobs are serving policy (cache sizing, padding floors, coalescing
-    width, replan bounds).  The old per-knob evaluation kwargs
-    (``radius=``, ``n_strips=``, ...) are accepted as a deprecation shim
-    and mapped onto an :class:`~repro.core.keys.EvalConfig`.
+    width, replan bounds, overload bounds).  The old per-knob evaluation
+    kwargs (``radius=``, ``n_strips=``, ...) are accepted as a
+    deprecation shim and mapped onto an
+    :class:`~repro.core.keys.EvalConfig`.
+
+    Overload knobs (all default-off — unset, the session behaves
+    bit-for-bit like the unbounded one):
+
+    * ``max_queue`` — max requests admitted per ``evaluate_batch`` call;
+    * ``max_queue_cost`` — max summed padded work units (vertex bucket +
+      edge bucket) admitted at once;
+    * ``default_deadline`` — seconds-from-arrival budget applied to
+      every request that does not carry its own;
+    * ``dispatch_timeout`` — wall-clock guard on each engine dispatch
+      even when requests carry no deadline;
+    * ``probe_interval`` — fused successes the breaker counts while
+      open before re-probing the mesh (see
+      :class:`~repro.launch.admission.CircuitBreaker`).
     """
 
     def __init__(self, config: EvalConfig = None, *, cache_size: int = 128,
                  vertex_floor: int = 128, edge_floor: int = 128,
                  max_coalesce: int = 32, max_replan_retries: int = 2,
                  replan_growth: float = 1.5, growth_ceiling: float = 4.0,
+                 max_queue: int = None, max_queue_cost: int = None,
+                 default_deadline: float = None,
+                 dispatch_timeout: float = None, probe_interval: int = 8,
                  mesh=None, **legacy_kwargs):
         if legacy_kwargs:
             if config is not None:
@@ -189,28 +247,32 @@ class EvalSession:
                 "(use repro.api.Evaluator for the other backends)")
         if self.config.backend == "graph_sharded" and mesh is None:
             # graph_sharded NEEDS a mesh (it is what the backend means);
-            # default to every visible device, capped by config.shards
-            import jax
-            from repro.distributed.compat import make_mesh
-            devices = jax.devices()
-            n = len(devices)
-            if self.config.shards is not None:
-                n = min(n, self.config.shards)
-            mesh = make_mesh((n,), ("graph",), devices=devices[:n])
+            # the elastic policy picks the shape from visible devices,
+            # capped by config.shards
+            from repro.launch.elastic import serving_mesh
+            mesh = serving_mesh("graph", shards=self.config.shards)
         self.vertex_floor = int(vertex_floor)
         self.edge_floor = int(edge_floor)
         self.max_coalesce = int(max_coalesce)
         self.max_replan_retries = int(max_replan_retries)
         self.replan_growth = float(replan_growth)
         self.growth_ceiling = float(growth_ceiling)
+        self.max_queue = None if max_queue is None else int(max_queue)
+        self.max_queue_cost = (None if max_queue_cost is None
+                               else int(max_queue_cost))
+        self.default_deadline = (None if default_deadline is None
+                                 else float(default_deadline))
+        self.dispatch_timeout = (None if dispatch_timeout is None
+                                 else float(dispatch_timeout))
         # mesh is serving policy, not evaluation semantics: when set (and
         # multi-device), coalesced batches dispatch through the
         # batch-axis-sharded driver — results stay bit-identical on
         # integer metrics, so routing is transparent to callers.  A mesh
-        # dispatch failure flips _mesh_ok: the degradation ladder then
-        # serves single-host until restore_mesh().
+        # dispatch failure opens the breaker: the degradation ladder then
+        # serves single-host until a canary probe (or restore_mesh())
+        # closes it again.
         self.mesh = mesh
-        self._mesh_ok = True
+        self.breaker = CircuitBreaker(probe_interval)
         self.plans = PlanCache(cache_size)
         # traces counts engine traces triggered by this session (warmup
         # compiles land here; a steady-state delta of zero is the
@@ -221,43 +283,54 @@ class EvalSession:
             "graph_sharded_dispatches": 0,
             "quarantined": 0, "sanitized": 0, "dispatch_failures": 0,
             "chunk_splits": 0, "degraded_dispatches": 0, "saturated": 0,
+            "shed": 0, "expired": 0, "cancelled": 0,
+            "queue_high_watermark": 0, "watchdog_abandoned": 0,
         }
 
     @property
     def stats(self):
         """Counter snapshot; plan_hits/plan_misses come straight from the
-        :class:`PlanCache` (single source of truth)."""
+        :class:`PlanCache` and the breaker counters from the
+        :class:`~repro.launch.admission.CircuitBreaker` (single sources
+        of truth)."""
         s = dict(self._stats)
         s["plan_hits"] = self.plans.hits
         s["plan_misses"] = self.plans.misses
+        s.update(self.breaker.counters)
         return s
 
     def health(self) -> dict:
         """Operational snapshot: which rung of the degradation ladder
-        the session is serving from, and the counters that certify each
-        fault-tolerance guarantee (see ``docs/robustness.md``)."""
-        degraded = self.mesh is not None and not self._mesh_ok
+        the session is serving from, the breaker state, and the counters
+        that certify each fault-tolerance guarantee (see
+        ``docs/robustness.md``)."""
+        state = self.breaker.state
+        mesh_live = self.mesh is not None and state != admission.OPEN
+        degraded = self.mesh is not None and state != admission.CLOSED
         return {
             "status": "degraded" if degraded else "ok",
             "backend": self.config.backend,
             "validation": self.config.validation,
+            "breaker_state": state,
             "dispatch_mode": ("graph_sharded"
                               if self.config.backend == "graph_sharded"
-                              and self.mesh is not None and self._mesh_ok
+                              and mesh_live
                               else "sharded" if self.mesh is not None
-                              and self.mesh.size > 1 and self._mesh_ok
+                              and self.mesh.size > 1 and mesh_live
                               else "single-host"),
             "mesh": (None if self.mesh is None else
                      {"devices": int(self.mesh.size),
-                      "active": bool(self._mesh_ok)}),
+                      "active": state == admission.CLOSED}),
             "plans_cached": len(self.plans),
             "counters": self.stats,
         }
 
     def restore_mesh(self) -> None:
-        """Re-arm the mesh after operator repair: the next coalesced
-        dispatch climbs back up the ladder to sharded serving."""
-        self._mesh_ok = True
+        """Manual override: force the breaker closed after operator
+        repair — the next coalesced dispatch climbs straight back up the
+        ladder to sharded serving (no canary, no ``auto_restores``
+        credit)."""
+        self.breaker.force_close()
 
     # -- request preparation ------------------------------------------------
 
@@ -281,7 +354,9 @@ class EvalSession:
         edges_p[:n_e] = edges
         key = (topology_hash(edges, n_v), vb, eb, self.config)
         return key, dict(index=index, pos=pos, edges=edges, pos_p=pos_p,
-                         edges_p=edges_p, n_v=n_v, n_e=n_e, flags=flags)
+                         edges_p=edges_p, n_v=n_v, n_e=n_e, flags=flags,
+                         cost=vb + eb, deadline=None, cancel=None,
+                         arrival=None)
 
     def _plan_for(self, key, member):
         plan = self.plans.get(key)
@@ -302,9 +377,12 @@ class EvalSession:
 
         A sharded dispatch that fails (mesh lost / shard_map error —
         injected or real) degrades to the fused single-host program
-        *within this dispatch* and marks the mesh lost; integer metrics
+        *within this dispatch* and opens the breaker; integer metrics
         are bit-identical between the two rungs, so callers never see
-        the difference except in the ``degraded_dispatches`` counter."""
+        the difference except in the ``degraded_dispatches`` counter.
+        While the breaker is open, each fused success feeds its
+        half-open countdown; a half-open breaker makes the next
+        mesh-eligible dispatch the canary probe."""
         faults.check_dispatch()
         t0 = engine.trace_count()
         self._stats["dispatches"] += 1
@@ -312,7 +390,7 @@ class EvalSession:
         n_e = np.int32(chunk[0]["n_e"])
         use_kernels = self.config.use_kernels
         if (self.config.backend == "graph_sharded" and self.mesh is not None
-                and self._mesh_ok):
+                and self.breaker.allow()):
             # top rung: each layout spatially partitioned over the mesh
             # (a chunk dispatches one driver call per member — the graph
             # axis, not the batch axis, is what's sharded here).  Any
@@ -321,11 +399,14 @@ class EvalSession:
             from repro.distributed.graph_sharded import \
                 evaluate_graph_sharded
             try:
+                if self.breaker.probing:
+                    faults.check_probe()
                 faults.check_sharded()
                 results = [evaluate_graph_sharded(
                     self.mesh, plan, c["pos_p"], c["edges_p"],
                     n_valid_vertices=n_v, n_valid_edges=n_e)
                     for c in chunk]
+                self.breaker.record_success()
                 self._stats["graph_sharded_dispatches"] += len(chunk)
                 if len(chunk) > 1:
                     self._stats["coalesced"] += len(chunk)
@@ -334,7 +415,7 @@ class EvalSession:
                 self._stats["traces"] += engine.trace_count() - t0
                 return faults.storm_overflow(reports)
             except Exception:
-                self._mesh_ok = False
+                self.breaker.record_failure()
                 self._stats["degraded_dispatches"] += 1
         if len(chunk) == 1:
             res = engine.evaluate_planned(
@@ -346,32 +427,140 @@ class EvalSession:
             batch = np.stack([c["pos_p"] for c in chunk])
             res = None
             if (self.mesh is not None and self.mesh.size > 1
-                    and self._mesh_ok and not use_kernels):
+                    and not use_kernels and self.breaker.allow()):
                 # scale-out path: shard the coalesced batch axis over the
                 # mesh (the Pallas-kernel route stays single-device —
                 # its vmapped tiles are not shard_map-composed)
                 from repro.distributed.batched import \
                     evaluate_layouts_sharded
                 try:
+                    if self.breaker.probing:
+                        faults.check_probe()
                     faults.check_sharded()
                     res = evaluate_layouts_sharded(
                         self.mesh, plan, batch, chunk[0]["edges_p"],
                         n_valid_vertices=n_v, n_valid_edges=n_e)
+                    self.breaker.record_success()
                     self._stats["sharded_dispatches"] += 1
                 except Exception:
                     # one rung down the ladder: fused single-host (same
                     # batched body, bit-identical integer metrics); the
-                    # mesh stays off until restore_mesh()
-                    self._mesh_ok = False
+                    # breaker opens and re-probes on its own schedule
+                    self.breaker.record_failure()
                     self._stats["degraded_dispatches"] += 1
                     res = None
             if res is None:
                 res = engine.evaluate_layouts(
                     plan, batch, chunk[0]["edges_p"], n_v, n_e,
                     use_kernels=use_kernels)
+        if len(chunk) > 1:
             reports = scores_from_batch(res, int(n_v), int(n_e))
+        if self.mesh is not None:
+            # the fused rung served while a mesh exists: feed the
+            # breaker's half-open countdown (no-op unless it is open)
+            self.breaker.record_fallback_success()
         self._stats["traces"] += engine.trace_count() - t0
         return faults.storm_overflow(reports)
+
+    # -- the hung-dispatch watchdog ------------------------------------------
+
+    def _chunk_timeout(self, chunk):
+        """Wall-clock budget for one dispatch of ``chunk``: the tighter
+        of ``dispatch_timeout`` and the earliest member deadline's
+        remaining time; ``None`` (no guard) when neither is in force."""
+        limit = self.dispatch_timeout
+        now = None
+        for m in chunk:
+            d = m["deadline"]
+            if d is not None:
+                if now is None:
+                    now = admission.clock()
+                remaining = d - now
+                limit = remaining if limit is None else min(limit, remaining)
+        return limit
+
+    def _guarded_dispatch(self, plan, chunk):
+        """Dispatch under the watchdog.  With no budget in force this is
+        a direct call (zero threads, zero clock reads — the steady-state
+        fast path).  With one, the dispatch runs on a daemon worker and
+        a dispatch that outlives its budget is ABANDONED: the worker is
+        discarded (any injected hang is released so it exits instead of
+        computing into the void) and :class:`DeadlineExceededError`
+        raises into the normal split-and-retry path, so only this
+        chunk's slots pay while the queue keeps draining.
+
+        An abandoned *real* dispatch may still complete on its worker
+        thread later and bump dispatch counters — the GIL makes the
+        increments safe, and the late result is dropped on the floor.
+        """
+        timeout = self._chunk_timeout(chunk)
+        if timeout is None:
+            return self._dispatch(plan, chunk)
+        start = admission.clock()
+        if timeout <= 0:
+            raise DeadlineExceededError(
+                "dispatch budget already exhausted before launch",
+                elapsed=0.0)
+        box = {}
+        done = threading.Event()
+
+        def work():
+            try:
+                box["reports"] = self._dispatch(plan, chunk)
+            except BaseException as err:
+                box["err"] = err
+            finally:
+                done.set()
+
+        worker = threading.Thread(target=work, daemon=True,
+                                  name="eval-session-dispatch")
+        worker.start()
+        if not done.wait(timeout):
+            self._stats["watchdog_abandoned"] += 1
+            faults.release_hangs()
+            raise DeadlineExceededError(
+                f"dispatch exceeded its {timeout:.3f}s wall-clock budget "
+                "and was abandoned by the watchdog",
+                elapsed=admission.clock() - start)
+        if "err" in box:
+            raise box["err"]
+        return box["reports"]
+
+    # -- queue reaping (deadlines + cancellation) ----------------------------
+
+    def _reap(self, members, out):
+        """Drop queued members whose deadline passed or whose cancel
+        token fired — each fails ONLY its own slot (``expired`` /
+        ``cancelled`` counters) — and return the still-live rest.
+        Deadline-free members cost no clock read."""
+        live = []
+        now = None
+        for m in members:
+            tok = m["cancel"]
+            if tok is not None and tok.cancelled:
+                self._stats["cancelled"] += 1
+                out[m["index"]] = error_scores(
+                    CancelledError("request cancelled before dispatch",
+                                   request_index=m["index"]),
+                    m["n_v"], m["n_e"])
+                continue
+            d = m["deadline"]
+            if d is not None:
+                if now is None:
+                    now = admission.clock()
+                if now >= d:
+                    self._stats["expired"] += 1
+                    elapsed = (None if m["arrival"] is None
+                               else now - m["arrival"])
+                    out[m["index"]] = error_scores(
+                        DeadlineExceededError(
+                            "deadline passed while queued (before "
+                            "dispatch)", request_index=m["index"],
+                            elapsed=elapsed),
+                        m["n_v"], m["n_e"])
+                    continue
+            live.append(m)
+        return live
 
     def _settle(self, member, report):
         """Attach the member's sanitization flags to its report."""
@@ -382,11 +571,12 @@ class EvalSession:
         return report
 
     def _run_chunk(self, key, plan, chunk, out):
-        """Dispatch one chunk with the full fault story: split-and-retry
-        on dispatch exceptions, bounded replan backoff on overflow, and
-        per-slot error results instead of batch-wide failure."""
+        """Dispatch one chunk with the full fault story: the watchdog
+        guard, split-and-retry on dispatch exceptions, bounded replan
+        backoff on overflow, and per-slot error results instead of
+        batch-wide failure."""
         try:
-            reports = self._dispatch(plan, chunk)
+            reports = self._guarded_dispatch(plan, chunk)
             attempt = 0
             worst = max(range(len(reports)),
                         key=lambda i: reports[i].overflow)
@@ -404,12 +594,13 @@ class EvalSession:
                     plan, chunk[worst]["pos"], chunk[worst]["edges"],
                     reports[worst], growth=growth)
                 self.plans.put(key, plan)
-                reports = self._dispatch(plan, chunk)
+                reports = self._guarded_dispatch(plan, chunk)
                 worst = max(range(len(reports)),
                             key=lambda i: reports[i].overflow)
         except Exception as err:  # infrastructure failure (XLA, OOM, an
-            # injected fault, ...) — mesh loss never lands here: the
-            # ladder in _dispatch already degraded it to single-host
+            # injected fault, a watchdog abandonment, ...) — mesh loss
+            # never lands here: the ladder in _dispatch already degraded
+            # it to single-host
             return self._fail_chunk(key, plan, chunk, out, err)
 
         mode = self.config.validation
@@ -438,14 +629,26 @@ class EvalSession:
         """A dispatch raised: split the chunk and retry members
         individually (one poisoned interaction must not take down B-1
         innocent requests); a single member that still fails has the
-        error quarantined to its own slot."""
+        error quarantined to its own slot.  An abandoned (hung) chunk
+        lands here too — its members are reaped first, so the ones whose
+        deadline the hang burned fail with ``DeadlineExceededError``
+        rather than being pointlessly re-dispatched."""
         self._stats["dispatch_failures"] += 1
         if len(chunk) > 1:
             self._stats["chunk_splits"] += 1
-            for member in chunk:
+            for member in self._reap(chunk, out):
                 plan = self._run_chunk(key, plan, [member], out)
             return plan
         member = chunk[0]
+        if isinstance(err, DeadlineExceededError):
+            # the watchdog abandoned this member's dispatch (or its
+            # budget was gone before launch): its own slot expires —
+            # that is a deadline outcome, not a quarantine
+            err.request_index = member["index"]
+            self._stats["expired"] += 1
+            out[member["index"]] = error_scores(err, member["n_v"],
+                                                member["n_e"])
+            return plan
         if not isinstance(err, ReadabilityError):
             wrapped = BackendUnavailableError(
                 f"dispatch failed: {type(err).__name__}: {err}",
@@ -461,26 +664,55 @@ class EvalSession:
 
     # -- public API ---------------------------------------------------------
 
-    def evaluate(self, pos, edges):
+    def evaluate(self, pos, edges, *, deadline=None, cancel=None):
         """One request -> one :class:`ReadabilityScores`.
 
         Single-request callers want exceptions, not error slots: a
-        quarantined result re-raises its typed error here."""
-        return self.evaluate_batch([(pos, edges)])[0].raise_for_error()
+        quarantined/shed/expired result re-raises its typed error here.
+        ``deadline`` is a seconds-from-now budget; ``cancel`` a
+        :class:`~repro.launch.admission.CancelToken`."""
+        return self.evaluate_batch(
+            [(pos, edges)], deadline=deadline,
+            cancel=None if cancel is None else [cancel],
+        )[0].raise_for_error()
 
-    def evaluate_batch(self, requests):
+    def evaluate_batch(self, requests, *, deadline=None, cancel=None):
         """Evaluate ``[(pos, edges), ...]``; same-topology same-bucket
         requests coalesce into single batched dispatches.  Returns scores
         in request order.
+
+        ``deadline`` — seconds-from-arrival budget: a scalar (applies to
+        every request) or a per-request sequence (``None`` entries mean
+        no deadline); defaults to the session's ``default_deadline``
+        knob.  ``cancel`` — a per-request sequence of
+        :class:`~repro.launch.admission.CancelToken` (or ``None``
+        entries).
 
         Malformed requests (under ``validation="strict"``/
         ``"sanitize"``) are QUARANTINED: their slot carries the typed
         error (``scores.ok`` is False) while every other slot evaluates
         normally.  Under ``validation="off"`` validation errors cannot
         arise, and any crash a malformed request causes propagates (the
-        pre-fault-layer behavior)."""
-        groups: OrderedDict = OrderedDict()
-        out = [None] * len(requests)
+        pre-fault-layer behavior).  Overload shedding, deadline expiry,
+        and cancellation likewise fail ONLY their own slots —
+        ``OverloadedError`` / ``DeadlineExceededError`` /
+        ``CancelledError``, all in every validation mode (they are
+        serving-policy outcomes, not input judgments)."""
+        n = len(requests)
+        now = (admission.clock()
+               if deadline is not None or self.default_deadline is not None
+               else None)
+        deadlines = admission.resolve_deadlines(
+            n, deadline, self.default_deadline, 0.0 if now is None else now)
+        if cancel is None:
+            tokens = None
+        else:
+            tokens = list(cancel)
+            if len(tokens) != n:
+                raise ValueError(f"got {len(tokens)} cancel tokens for "
+                                 f"{n} requests")
+        out = [None] * n
+        prepared = []
         quarantine_modes = ("strict", "sanitize")
         for i, (pos, edges) in enumerate(requests):
             pos = faults.corrupt_request(pos)
@@ -492,8 +724,32 @@ class EvalSession:
                 self._stats["quarantined"] += 1
                 out[i] = error_scores(err)
                 continue
-            groups.setdefault(key, []).append(member)
-        self._stats["requests"] += len(requests)
+            member["key"] = key
+            member["deadline"] = deadlines[i]
+            member["cancel"] = None if tokens is None else tokens[i]
+            member["arrival"] = now
+            prepared.append(member)
+        self._stats["requests"] += n
+
+        # the bounded queue: shed the overload BEFORE planning/dispatch
+        # spends anything on it (deterministic: oldest-deadline-first,
+        # ties latest-arrival-first)
+        admitted, shed = admission.admit(
+            prepared, max_queue=self.max_queue, max_cost=self.max_queue_cost)
+        for m in shed:
+            self._stats["shed"] += 1
+            out[m["index"]] = error_scores(
+                OverloadedError(
+                    f"request shed by admission control ({len(prepared)} "
+                    f"pending > queue bound)", request_index=m["index"],
+                    queue_depth=len(prepared), bound=self.max_queue),
+                m["n_v"], m["n_e"])
+        if len(admitted) > self._stats["queue_high_watermark"]:
+            self._stats["queue_high_watermark"] = len(admitted)
+
+        groups: OrderedDict = OrderedDict()
+        for member in admitted:
+            groups.setdefault(member["key"], []).append(member)
         for key, members in groups.items():
             try:
                 plan = self._plan_for(key, members[0])
@@ -514,6 +770,17 @@ class EvalSession:
                             reason="planning_failed"),
                         member["n_v"], member["n_e"])
                 continue
-            for chunk in pow2_chunks(members, self.max_coalesce):
+            # chunk the live queue in descending-pow2 widths (same batch
+            # dims as pow2_chunks, so steady state stays zero-retrace),
+            # reaping expired/cancelled members between dispatches — a
+            # slow neighbour must not drag a whole group past its
+            # deadline unreported
+            remaining = self._reap(members, out)
+            while remaining:
+                width = min(len(remaining), self.max_coalesce)
+                width = 1 << (width.bit_length() - 1)
+                chunk, remaining = remaining[:width], remaining[width:]
                 plan = self._run_chunk(key, plan, chunk, out)
+                if remaining:
+                    remaining = self._reap(remaining, out)
         return out

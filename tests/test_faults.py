@@ -14,13 +14,22 @@ the counter that certifies it:
   of silently under-counting;
 * simulated mesh loss degrades distributed -> fused single-host with
   correct scores (subprocess with 4 forced host devices, same pattern
-  as ``test_sharded_batched.py``).
+  as ``test_sharded_batched.py``);
+* the breaker self-heals: after ``probe_interval`` fused successes the
+  session re-probes the mesh with a canary dispatch and auto-restores
+  sharded serving (closed -> open -> half_open -> closed, certified by
+  ``probes`` / ``auto_restores``); a rejected probe re-opens it;
+* ``FaultPlan``'s ordinal bookkeeping is thread-safe (the watchdog
+  dispatches on worker threads).
+
+Overload/deadline/watchdog coverage lives in ``tests/test_overload.py``.
 """
 
 import json
 import os
 import subprocess
 import sys
+import threading
 
 import numpy as np
 import pytest
@@ -91,7 +100,40 @@ def test_fault_plan_bookkeeping():
     assert faults.corrupt_request(pos) is pos
     faults.check_dispatch()
     faults.check_sharded()
+    faults.check_probe()
+    faults.release_hangs()
     assert faults.storm_overflow(["x"]) == ["x"]
+
+
+def test_fault_plan_ordinals_are_thread_safe():
+    """Concurrent hooks must assign unique ordinals: N threads x K
+    check_dispatch calls hit exactly the selected fail ordinals, no
+    double-counts, no gaps (the watchdog runs dispatches on worker
+    threads, so this is load-bearing, not theoretical)."""
+    n_threads, per_thread = 8, 50
+    total = n_threads * per_thread
+    fail_at = set(range(0, total, 7))
+    failures = []
+    with FaultPlan(fail_dispatches=fail_at) as fp:
+        start = threading.Barrier(n_threads)
+
+        def worker():
+            start.wait()
+            for _ in range(per_thread):
+                try:
+                    faults.check_dispatch()
+                except FaultInjected:
+                    failures.append(1)
+
+        threads = [threading.Thread(target=worker)
+                   for _ in range(n_threads)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        assert fp._seen["dispatches"] == total
+    assert fp.injected["fail_dispatches"] == len(fail_at)
+    assert len(failures) == len(fail_at)
 
 
 # ---------------------------------------------------------------------------
@@ -393,3 +435,131 @@ def test_mesh_loss_degrades_to_single_host():
                                       "dispatch_mode": "sharded"}
     assert out["sharded_after_restore"] >= 1
     assert all(out["restored_same"])
+
+
+# ---------------------------------------------------------------------------
+# self-healing breaker: probe/auto-restore cycle (forced 4-device subprocess)
+# ---------------------------------------------------------------------------
+
+BREAKER_SCRIPT = r"""
+import os, sys, json
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+import jax
+import numpy as np
+
+from repro.core.keys import EvalConfig
+from repro.distributed.compat import make_mesh
+from repro.launch.faults import FaultPlan
+from repro.launch.session import EvalSession
+
+assert len(jax.devices()) == 4
+
+rng = np.random.default_rng(7)
+pos = rng.uniform(0, 60, (60, 2)).astype(np.float32)
+edges = set()
+while len(edges) < 120:
+    v, u = rng.integers(0, 60, 2)
+    if v != u:
+        edges.add((min(v, u), max(v, u)))
+edges = np.array(sorted(edges), np.int32)
+reqs = [(pos + rng.normal(0, 1.5, pos.shape).astype(np.float32), edges)
+        for _ in range(4)]
+
+config = EvalConfig(radius=2.0, n_strips=48)
+mesh = make_mesh((4,), ("eval",))
+
+def same(batch, truth):
+    return [[s.edge_crossing, s.node_occlusion] ==
+            [t.edge_crossing, t.node_occlusion] and s.ok and t.ok
+            for s, t in zip(batch, truth)]
+
+truth = EvalSession(config).evaluate_batch(reqs)
+
+# ---- leg 1: closed -> open -> half_open -> closed (auto-restore) ----
+sess = EvalSession(config, mesh=mesh, probe_interval=2)
+states = [sess.health()["breaker_state"]]
+with FaultPlan(mesh_loss_dispatches=0) as fp:
+    r1 = sess.evaluate_batch(reqs)        # mesh loss -> open, fused serves
+states.append(sess.health()["breaker_state"])
+r2 = sess.evaluate_batch(reqs)            # fused success #2 -> half_open
+states.append(sess.health()["breaker_state"])
+r3 = sess.evaluate_batch(reqs)            # canary probe -> closed
+states.append(sess.health()["breaker_state"])
+health = sess.health()
+s = sess.stats
+
+# ---- leg 2: the canary is rejected -> re-open -> heal on the next ----
+sess2 = EvalSession(config, mesh=mesh, probe_interval=1)
+with FaultPlan(mesh_loss_dispatches=0):
+    sess2.evaluate_batch(reqs)            # open; fused success -> half_open
+with FaultPlan(reject_probes=0) as fpr:
+    r_rej = sess2.evaluate_batch(reqs)    # canary REJECTED -> open again
+reopened = sess2.health()["breaker_state"]
+r_heal = sess2.evaluate_batch(reqs)       # next canary passes -> closed
+s2 = sess2.stats
+
+out = {
+    "states": states,
+    "injected": fp.injected["mesh_loss_dispatches"],
+    "probes": s["probes"],
+    "auto_restores": s["auto_restores"],
+    "breaker_opens": s["breaker_opens"],
+    "degraded_dispatches": s["degraded_dispatches"],
+    "quarantined": s["quarantined"],
+    "sharded_dispatches": s["sharded_dispatches"],
+    "health": {"status": health["status"],
+               "dispatch_mode": health["dispatch_mode"],
+               "mesh_active": health["mesh"]["active"]},
+    "same1": same(r1, truth), "same2": same(r2, truth),
+    "same3": same(r3, truth),
+    "probe_rejected": fpr.injected["reject_probes"],
+    "reopened": reopened,
+    "leg2": {"probes": s2["probes"], "auto_restores": s2["auto_restores"],
+             "breaker_opens": s2["breaker_opens"],
+             "degraded_dispatches": s2["degraded_dispatches"],
+             "quarantined": s2["quarantined"],
+             "state": sess2.health()["breaker_state"]},
+    "same_rej": same(r_rej, truth), "same_heal": same(r_heal, truth),
+}
+print("RESULT " + json.dumps(out))
+"""
+
+
+def test_breaker_self_heals_and_survives_rejected_probe():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    result = subprocess.run([sys.executable, "-c", BREAKER_SCRIPT],
+                            env=env, capture_output=True, text=True,
+                            timeout=900)
+    assert result.returncode == 0, result.stdout + "\n" + result.stderr
+    line = [l for l in result.stdout.splitlines()
+            if l.startswith("RESULT ")][-1]
+    out = json.loads(line[len("RESULT "):])
+
+    # the full cycle, observed from health() after each batch
+    assert out["states"] == ["closed", "open", "half_open", "closed"]
+    assert out["injected"] == 1
+    assert out["probes"] == 1
+    assert out["auto_restores"] == 1
+    assert out["breaker_opens"] == 1
+    assert out["degraded_dispatches"] == 1
+    assert out["quarantined"] == 0
+    # only the canary's dispatch reached the mesh
+    assert out["sharded_dispatches"] == 1
+    assert out["health"] == {"status": "ok", "dispatch_mode": "sharded",
+                             "mesh_active": True}
+    # every batch — degraded, fallback, and restored — is bit-identical
+    # to the single-host truth
+    assert all(out["same1"]) and all(out["same2"]) and all(out["same3"])
+
+    # leg 2: a rejected canary re-opens the circuit, traffic still
+    # serves correctly, and the NEXT probe heals it
+    assert out["probe_rejected"] == 1
+    assert out["reopened"] == "half_open"      # interval=1 re-arms at once
+    assert out["leg2"]["probes"] == 2
+    assert out["leg2"]["auto_restores"] == 1
+    assert out["leg2"]["breaker_opens"] == 2
+    assert out["leg2"]["degraded_dispatches"] == 2
+    assert out["leg2"]["quarantined"] == 0
+    assert out["leg2"]["state"] == "closed"
+    assert all(out["same_rej"]) and all(out["same_heal"])
