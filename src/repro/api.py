@@ -58,15 +58,17 @@ from repro.core.validate import (BackendUnavailableError,  # noqa: F401
                                  validate_batch, validate_request)
 from repro.launch.admission import CancelToken  # noqa: F401  (re-export)
 from repro.launch.session import EvalSession
+from repro.search import (GradientSearch, SearchResult)  # noqa: F401
 
 __all__ = [
     "ALL_METRICS", "BackendUnavailableError", "CancelToken",
     "CancelledError", "CapacityError", "DeadlineExceededError", "EvalConfig",
-    "EvalSession", "Evaluator", "InvalidInputError", "OverloadedError",
-    "ReadabilityError", "ReadabilityScores", "evaluate_exact",
-    "evaluator_for", "pow2_bucket", "pow2_chunks",
-    "reset_deprecation_warnings", "scores_from_batch", "scores_from_result",
-    "topology_hash", "validate_batch", "validate_request",
+    "EvalSession", "Evaluator", "GradientSearch", "InvalidInputError",
+    "OverloadedError", "ReadabilityError", "ReadabilityScores",
+    "SearchResult", "evaluate_exact", "evaluator_for", "pow2_bucket",
+    "pow2_chunks", "reset_deprecation_warnings", "scores_from_batch",
+    "scores_from_result", "topology_hash", "validate_batch",
+    "validate_request",
 ]
 
 
@@ -96,6 +98,12 @@ class Evaluator:
       (:func:`repro.distributed.batched.evaluate_layouts_sharded`;
       ``EvalConfig.shards`` bounds the device count) with integer
       metrics bit-identical to the single-host batched program.
+    * :meth:`search` — gradient-guided layout *generation*: descend the
+      differentiable relaxations (:mod:`repro.core.soft`) of this
+      config's metrics with AdamW from a seed layout, B parallel
+      restarts per step in one batched dispatch (batch-axis sharded on
+      ``backend="distributed"``), exact integer re-scores selecting the
+      winner.  Returns a :class:`~repro.search.gradient.SearchResult`.
     * :meth:`session` — a fresh :class:`EvalSession` bound to the same
       config, for request streams that want the serving policy knobs.
     """
@@ -289,6 +297,26 @@ class Evaluator:
         import jax
         res = jax.device_get(res)
         return res._replace(n_vertices=n_v, n_edges=n_e, flags=flags)
+
+
+    # -- search -------------------------------------------------------------
+
+    def search(self, pos0, edges, **knobs):
+        """Gradient-guided layout search from ``pos0`` under this
+        config's metric subset and geometry.
+
+        ``pos0`` is a ``(V, 2)`` seed layout (jittered into ``restarts``
+        parallel starts) or an explicit ``(B, V, 2)`` restart batch;
+        ``knobs`` are :class:`~repro.search.gradient.GradientSearch`
+        keywords (``steps``, ``restarts``, ``rescore_every``, ``opt``,
+        ``weights``, ``temperature``, ...).  The soft loss anneals from
+        ``EvalConfig.temperature``; inputs route through the same
+        validation taxonomy as :meth:`evaluate_batch`.  Returns a
+        :class:`~repro.search.gradient.SearchResult` — exact integer
+        scores only, ``result.best_positions`` is the winning layout."""
+        from repro.search import GradientSearch
+        knobs.setdefault("mesh", self.mesh)
+        return GradientSearch(self.config, **knobs).run(pos0, edges)
 
 
 # ---------------------------------------------------------------------------

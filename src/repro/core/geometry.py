@@ -74,9 +74,39 @@ def segment_theta(x1, y1, x2, y2):
     return jnp.where(theta < 0, theta + jnp.pi, theta) % jnp.pi
 
 
+def segment_theta_safe(x1, y1, x2, y2):
+    """:func:`segment_theta` with a finite gradient at zero-length
+    segments.
+
+    ``arctan2``'s partials are ``-dy/r^2`` / ``dx/r^2`` — NaN at a
+    coincident endpoint pair, and a NaN partial poisons the whole
+    backward pass even under a zero cotangent (0 * NaN = NaN).  The
+    double-``where`` routes degenerate segments through the constant
+    ``arctan2(0, 1)``, which equals the primal value ``arctan2(0, 0) = 0``
+    bit-for-bit, so forward results are unchanged and the gradient there
+    is exactly zero.  The differentiable (soft) paths use this; the
+    exact paths keep the plain version.
+    """
+    ex, ey = x2 - x1, y2 - y1
+    degen = (ex == 0) & (ey == 0)
+    theta = jnp.arctan2(jnp.where(degen, 0.0, ey),
+                        jnp.where(degen, 1.0, ex))
+    return jnp.where(theta < 0, theta + jnp.pi, theta) % jnp.pi
+
+
 def directed_angle(x1, y1, x2, y2):
     """Directed angle of the ray (x1,y1) -> (x2,y2) in [0, 2*pi)."""
     a = jnp.arctan2(y2 - y1, x2 - x1)
+    return jnp.where(a < 0, a + TWO_PI, a)
+
+
+def directed_angle_safe(x1, y1, x2, y2):
+    """:func:`directed_angle` with a finite gradient at zero-length rays
+    (same double-``where`` construction, and the same primal values, as
+    :func:`segment_theta_safe`)."""
+    ex, ey = x2 - x1, y2 - y1
+    degen = (ex == 0) & (ey == 0)
+    a = jnp.arctan2(jnp.where(degen, 0.0, ey), jnp.where(degen, 1.0, ex))
     return jnp.where(a < 0, a + TWO_PI, a)
 
 

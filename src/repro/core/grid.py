@@ -399,8 +399,8 @@ def build_strip_segments(pos: jax.Array, edges: jax.Array, n_strips: int,
 
 def build_strip_segments_batched(pos: jax.Array, edges: jax.Array,
                                  n_strips: int, max_segments: int, *,
-                                 axis: int = 0,
-                                 edge_valid=None) -> StripSegments:
+                                 axis: int = 0, edge_valid=None,
+                                 safe_theta: bool = False) -> StripSegments:
     """Batched :func:`build_strip_segments`: ``(B, V, 2)`` layouts of one
     graph -> :class:`StripSegments` with ``(B, max_segments)`` fields and
     ``(B,)`` overflow.
@@ -412,8 +412,16 @@ def build_strip_segments_batched(pos: jax.Array, edges: jax.Array,
     stay *per-layout* (in ``[0, n_strips]``, ``n_strips`` = trash) —
     :func:`gather_ragged_buckets` consumes the ``(B, max_segments)`` key
     rows directly, one sorted row per layout.
+
+    ``safe_theta=True`` swaps the parent-edge angle to
+    :func:`~repro.core.geometry.segment_theta_safe`: identical forward
+    values, but a finite (zero) gradient on zero-length edges instead of
+    ``arctan2(0, 0)``'s NaN partials — the differentiable soft path
+    (:mod:`repro.core.soft`) needs this because one NaN partial poisons
+    the whole backward pass even under a zero cotangent.  The exact
+    paths keep the default (same ops as the single-layout builder).
     """
-    from repro.core.geometry import segment_theta
+    from repro.core.geometry import segment_theta, segment_theta_safe
 
     CALL_COUNTS["strip_builds"] += 1
 
@@ -422,7 +430,8 @@ def build_strip_segments_batched(pos: jax.Array, edges: jax.Array,
     q = pos[:, edges[:, 1]]
     x1, y1 = p[..., axis], p[..., 1 - axis]
     x2, y2 = q[..., axis], q[..., 1 - axis]
-    theta = segment_theta(p[..., 0], p[..., 1], q[..., 0], q[..., 1])
+    theta_fn = segment_theta_safe if safe_theta else segment_theta
+    theta = theta_fn(p[..., 0], p[..., 1], q[..., 0], q[..., 1])
     if edge_valid is None:
         edge_valid = jnp.ones(edges.shape[0], dtype=bool)
     ev = jnp.broadcast_to(edge_valid, x1.shape)      # one mask, all layouts
@@ -431,6 +440,14 @@ def build_strip_segments_batched(pos: jax.Array, edges: jax.Array,
                  axis=1, keepdims=True)
     hi = jnp.max(jnp.where(ev, jnp.maximum(x1, x2), -jnp.inf),
                  axis=1, keepdims=True)
+    # zero valid edges leaves the extent empty (lo = +inf): pin it to a
+    # finite dummy so the (fully masked) boundary ordinates below stay
+    # finite — ``inf * 0`` would plant forward NaNs that the hard
+    # comparisons shrug off but that poison gradients through the soft
+    # path (0 cotangent x NaN value is still NaN in the backward pass)
+    some = jnp.isfinite(lo)
+    lo = jnp.where(some, lo, 0.0)
+    hi = jnp.where(some, hi, 1.0)
     width = jnp.maximum((hi - lo) / n_strips, 1e-30)
 
     xa = jnp.minimum(x1, x2)

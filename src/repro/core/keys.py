@@ -149,6 +149,15 @@ class EvalConfig:
     program, even though per-layout *results* are shard-count invariant
     (``tests/test_sharded_batched.py`` certifies 1/2/4-shard runs agree
     bit-for-bit on integer metrics).
+
+    ``temperature`` is the *starting* sharpness of the differentiable
+    relaxation (:func:`repro.core.soft.soft_scores` — sigmoid widths are
+    ``temperature`` x the metric's natural scale; see ``docs/search.md``).
+    It only affects the soft/search path: the exact integer metrics every
+    ``evaluate*`` entry point reports are bit-identical across
+    temperatures.  It still lives on the config — canonicalized and part
+    of ``digest()``/equality — so two searches that differ only in
+    relaxation sharpness can never share a cache entry by accident.
     """
 
     radius: float = 0.5
@@ -163,6 +172,7 @@ class EvalConfig:
     precision: str = "float32"
     shards: Optional[int] = None
     validation: str = "strict"
+    temperature: float = 0.05
 
     def __post_init__(self):
         if self.orientation not in ORIENTATIONS:
@@ -202,6 +212,10 @@ class EvalConfig:
             if shards < 1:
                 raise ValueError(f"shards must be >= 1, got {shards}")
             object.__setattr__(self, "shards", shards)
+        temperature = float(self.temperature)
+        if not temperature > 0:
+            raise ValueError(f"temperature must be > 0, got {temperature}")
+        object.__setattr__(self, "temperature", temperature)
 
     # -- derived views -----------------------------------------------------
 

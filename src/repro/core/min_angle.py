@@ -70,7 +70,7 @@ def minimum_angle(pos: jax.Array, edges: jax.Array, *, n_vertices=None,
 
 
 def minimum_angle_batched(pos: jax.Array, edges: jax.Array, *,
-                          edge_valid=None):
+                          edge_valid=None, safe_grad: bool = False):
     """Batched M_a: ``(B, V, 2)`` layouts of one graph -> ``(B,)``.
 
     The single-layout path argsorts (vertex, angle) pairs and runs four
@@ -85,7 +85,14 @@ def minimum_angle_batched(pos: jax.Array, edges: jax.Array, *,
     passes, no scatter).  ``min`` is associative and commutative, so
     every reduction is bit-identical to the segment-op path.  Returns
     ``(m_a (B,), counted (B, V))``.
+
+    ``safe_grad=True`` computes the half-edge angles with
+    :func:`~repro.core.geometry.directed_angle_safe` (identical forward
+    values; finite gradients on zero-length edges) — the soft/search
+    path's option.  The exact paths keep the default.
     """
+    from repro.core.geometry import directed_angle_safe
+
     gridlib.CALL_COUNTS["vertex_sorts"] += 1
     B, V = pos.shape[0], pos.shape[1]
     E = edges.shape[0]
@@ -102,7 +109,8 @@ def minimum_angle_batched(pos: jax.Array, edges: jax.Array, *,
     sy = jnp.where(ok, py[:, srcc], 0.0)
     dx_ = jnp.where(ok, px[:, dst], 1.0)
     dy_ = jnp.where(ok, py[:, dst], 0.0)
-    ang = directed_angle(sx, sy, dx_, dy_)
+    angle_fn = directed_angle_safe if safe_grad else directed_angle
+    ang = angle_fn(sx, sy, dx_, dy_)
 
     n = 2 * E
     keys = jnp.broadcast_to(src, (B, n))

@@ -1,0 +1,15 @@
+"""Layout *generation* workloads driven by the readability engine.
+
+The paper's motivation runs one way — layout production is bottlenecked
+on readability scoring — and this package closes the loop the other
+way: use the evaluator to produce better layouts.  The first strategy
+is :class:`~repro.search.gradient.GradientSearch`: descend the
+differentiable relaxations of :mod:`repro.core.soft` with AdamW, B
+parallel restarts per step as ONE batched (or mesh-sharded) engine
+dispatch, exact integer metrics re-scored periodically and reported.
+"""
+
+from repro.search.gradient import (GradientSearch, SearchResult,
+                                   batch_objectives)
+
+__all__ = ["GradientSearch", "SearchResult", "batch_objectives"]

@@ -1,0 +1,136 @@
+"""Unit tests for repro.optim.adamw — the optimizer behind
+repro.search.gradient (schedule endpoints, clipping, descent) plus the
+int8 gradient-compression round-trip it ships for the train loop."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.optim import adamw
+
+
+def _lr(cfg, step):
+    return float(adamw.cosine_schedule(cfg)(jnp.asarray(step, jnp.int32)))
+
+
+class TestCosineSchedule:
+    CFG = adamw.AdamWConfig(peak_lr=1e-2, warmup_steps=10, total_steps=100,
+                            min_lr_frac=0.1)
+
+    def test_starts_at_zero(self):
+        assert _lr(self.CFG, 0) == 0.0
+
+    def test_linear_warmup(self):
+        np.testing.assert_allclose(_lr(self.CFG, 5),
+                                   self.CFG.peak_lr * 0.5, rtol=1e-6)
+
+    def test_peak_at_warmup_end(self):
+        np.testing.assert_allclose(_lr(self.CFG, 10), self.CFG.peak_lr,
+                                   rtol=1e-6)
+
+    def test_floor_at_total_steps(self):
+        np.testing.assert_allclose(
+            _lr(self.CFG, 100), self.CFG.peak_lr * self.CFG.min_lr_frac,
+            rtol=1e-6)
+
+    def test_monotone_decay_after_warmup(self):
+        lrs = [_lr(self.CFG, s) for s in range(10, 101, 10)]
+        assert all(a >= b for a, b in zip(lrs, lrs[1:]))
+
+    def test_stays_at_floor_past_total(self):
+        np.testing.assert_allclose(_lr(self.CFG, 500),
+                                   self.CFG.peak_lr * self.CFG.min_lr_frac,
+                                   rtol=1e-6)
+
+
+class TestClipByGlobalNorm:
+    def test_clips_large_gradients(self):
+        grads = {"a": jnp.full((4,), 10.0), "b": jnp.full((3,), -10.0)}
+        clipped, norm = adamw.clip_by_global_norm(grads, 1.0)
+        expected_norm = np.sqrt(7 * 100.0)
+        np.testing.assert_allclose(float(norm), expected_norm, rtol=1e-6)
+        np.testing.assert_allclose(float(adamw.global_norm(clipped)), 1.0,
+                                   rtol=1e-5)
+        # direction preserved: clipping is a uniform rescale
+        np.testing.assert_allclose(np.asarray(clipped["a"]),
+                                   10.0 / expected_norm, rtol=1e-5)
+
+    def test_leaves_small_gradients_alone(self):
+        grads = {"a": jnp.asarray([0.3, -0.4])}   # norm 0.5 < 1.0
+        clipped, norm = adamw.clip_by_global_norm(grads, 1.0)
+        np.testing.assert_allclose(float(norm), 0.5, rtol=1e-6)
+        np.testing.assert_allclose(np.asarray(clipped["a"]),
+                                   [0.3, -0.4], rtol=1e-6)
+
+    def test_apply_updates_reports_preclip_norm(self):
+        cfg = adamw.AdamWConfig(peak_lr=1e-3, warmup_steps=0, total_steps=10,
+                                weight_decay=0.0, clip_norm=1.0)
+        params = {"p": jnp.zeros((4,))}
+        grads = {"p": jnp.full((4,), 100.0)}
+        _, _, metrics = adamw.apply_updates(params, grads,
+                                            adamw.init_state(params), cfg)
+        np.testing.assert_allclose(float(metrics["grad_norm"]), 200.0,
+                                   rtol=1e-5)
+
+
+class TestApplyUpdates:
+    def test_quadratic_converges(self):
+        """AdamW on f(x) = ||x - t||^2 must shrink the loss and land
+        near the target — the descent contract GradientSearch rests on."""
+        target = jnp.asarray([3.0, -2.0, 0.5])
+        cfg = adamw.AdamWConfig(peak_lr=0.2, warmup_steps=5,
+                                total_steps=200, min_lr_frac=0.01,
+                                weight_decay=0.0, clip_norm=10.0)
+        lr_fn = adamw.cosine_schedule(cfg)
+        loss = jax.jit(lambda p: jnp.sum((p["x"] - target) ** 2))
+        grad = jax.jit(jax.grad(lambda p: jnp.sum((p["x"] - target) ** 2)))
+        params = {"x": jnp.zeros(3)}
+        state = adamw.init_state(params)
+        first = float(loss(params))
+        for _ in range(200):
+            params, state, _ = adamw.apply_updates(params, grad(params),
+                                                   state, cfg, lr_fn)
+        assert float(loss(params)) < 1e-3 < first
+        assert int(state["step"]) == 200
+
+    def test_weight_decay_shrinks_params(self):
+        cfg = adamw.AdamWConfig(peak_lr=0.1, warmup_steps=0, total_steps=10,
+                                min_lr_frac=1.0, weight_decay=0.5,
+                                clip_norm=1e9)
+        params = {"x": jnp.asarray([4.0])}
+        state = adamw.init_state(params)
+        new, _, _ = adamw.apply_updates(params, {"x": jnp.zeros(1)},
+                                        state, cfg)
+        # zero gradient: the only force is decay, pulling toward 0
+        assert 0.0 < float(new["x"][0]) < 4.0
+
+    def test_state_is_param_congruent_pytree(self):
+        params = {"a": jnp.zeros((2, 3)), "b": {"c": jnp.zeros(5)}}
+        state = adamw.init_state(params)
+        assert (jax.tree_util.tree_structure(state["m"])
+                == jax.tree_util.tree_structure(params))
+        assert state["m"]["a"].shape == (2, 3)
+        assert state["v"]["b"]["c"].shape == (5,)
+
+
+class TestInt8Compression:
+    """The int8 path is ALIVE (repro.launch.train uses it for the DP
+    all-reduce payload) — pin its round-trip accuracy here."""
+
+    def test_round_trip_accuracy(self):
+        rng = np.random.default_rng(0)
+        tree = {"w": jnp.asarray(rng.normal(0, 2.0, (37, 19)),
+                                 jnp.float32),
+                "b": jnp.asarray(rng.normal(0, 0.1, (53,)), jnp.float32)}
+        dec = adamw.decompress_int8(adamw.compress_int8(tree))
+        for k in tree:
+            a, b = np.asarray(tree[k]), np.asarray(dec[k])
+            assert b.shape == a.shape
+            # per-chunk scaling: error bounded by scale/2 = max|chunk|/254
+            tol = np.max(np.abs(a)) / 127.0
+            assert np.max(np.abs(a - b)) <= tol + 1e-7
+
+    def test_compressed_payload_is_int8(self):
+        enc = adamw.compress_int8({"w": jnp.ones((300,), jnp.float32)})
+        assert enc["w"]["q"].dtype == jnp.int8

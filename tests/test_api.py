@@ -379,3 +379,59 @@ def test_api_surface_is_warning_free(graph):
     ReadabilityServer(cfg).evaluate_batch([(pos, edges)])
     assert isinstance(api.ALL_METRICS, tuple)
     assert isinstance(ev.evaluate(pos, edges), ReadabilityScores)
+
+
+# ---------------------------------------------------------------------------
+# digest coverage: every config field must feed the digest
+# ---------------------------------------------------------------------------
+
+# one digest-changing override per EvalConfig field; adding a field to
+# the dataclass without adding it here (and hence without thinking about
+# its cache-key role) fails test_every_config_field_feeds_digest
+DIGEST_OVERRIDES = {
+    "radius": 0.75,
+    "n_strips": 48,
+    "orientation": "vertical",
+    "metrics": ("edge_crossing",),
+    "ideal_angle": 1.0,
+    "tier_strips": False,
+    "cell_block": 256,
+    "strip_block": 128,
+    "backend": "eager",
+    "precision": "bfloat16",
+    "shards": 2,
+    "validation": "sanitize",
+    "temperature": 0.2,
+}
+
+
+def test_every_config_field_feeds_digest():
+    import dataclasses
+    base = EvalConfig()
+    fields = {f.name for f in dataclasses.fields(EvalConfig)}
+    assert fields == set(DIGEST_OVERRIDES), (
+        "EvalConfig fields changed: update DIGEST_OVERRIDES (and make "
+        "sure the new field is canonicalized + digested)")
+    for name, value in DIGEST_OVERRIDES.items():
+        changed = EvalConfig(**{name: value})
+        assert getattr(changed, name) != getattr(base, name), name
+        assert changed.digest() != base.digest(), \
+            f"field {name!r} does not feed EvalConfig.digest()"
+        assert changed != base and hash(changed) != hash(base), name
+
+
+def test_temperature_round_trips():
+    """temperature is canonicalized, part of equality/digest, and
+    reaches EvalConfig through the benches' JSON --config path."""
+    import json
+    a = EvalConfig(temperature=0.1)
+    b = EvalConfig(temperature=np.float64(0.1))   # numpy spelling
+    assert isinstance(b.temperature, float)
+    assert a == b and a.digest() == b.digest()
+    # the bench --config contract: EvalConfig(**json.loads(...))
+    c = EvalConfig(**json.loads('{"temperature": 0.1, "n_strips": 64}'))
+    assert c == a
+    with pytest.raises(ValueError):
+        EvalConfig(temperature=0.0)
+    with pytest.raises(ValueError):
+        EvalConfig(temperature=-0.5)

@@ -1,0 +1,197 @@
+"""repro.core.soft — the differentiable companion of the exact engine.
+
+Pins the three contract points of docs/search.md:
+
+* soft -> exact as temperature -> 0 on tie-free layout families (ties
+  legitimately converge to 1/2 per sigmoid, so the annealing assertions
+  run on the jittered families where mathematical ties have measure
+  zero);
+* values AND gradients are finite on the degenerate families (duplicate
+  positions / zero-length edges, collinear, E=0);
+* temperature is traced: an annealing loop reuses ONE trace
+  (soft.trace_count is the proof, mirroring engine.trace_count).
+"""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.api import EvalConfig, Evaluator
+from repro.core import engine, soft
+from test_parity_matrix import make_family
+
+RADIUS = 2.0
+N_STRIPS = 32
+
+
+def _plan_for(pos, edges, **kw):
+    kw.setdefault("radius", RADIUS)
+    kw.setdefault("n_strips", N_STRIPS)
+    return engine.plan_readability(pos, edges, **kw)
+
+
+def _exact(pos, edges):
+    return Evaluator(EvalConfig(radius=RADIUS, n_strips=N_STRIPS)).evaluate(
+        pos, edges)
+
+
+# ---------------------------------------------------------------------------
+# soft -> exact annealing (tie-free families only; see module docstring)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kind", ["random", "cluster"])
+def test_counts_converge_to_exact(kind):
+    pos, edges = make_family(kind)
+    exact = _exact(pos, edges)
+    batch = pos[None]
+    plan = _plan_for(batch, edges)
+    got = soft.soft_scores(plan, batch, edges, 1e-5)
+    # count metrics: soft expected counts land on the integers
+    np.testing.assert_allclose(
+        float(got.node_occlusion[0]), float(exact.node_occlusion),
+        atol=max(0.5, 0.005 * float(exact.node_occlusion)))
+    np.testing.assert_allclose(
+        float(got.edge_crossing[0]), float(exact.edge_crossing),
+        atol=max(0.5, 0.005 * float(exact.edge_crossing)))
+    np.testing.assert_allclose(
+        float(got.edge_crossing_angle[0]), float(exact.edge_crossing_angle),
+        atol=0.01)
+    assert int(got.overflow[0]) == 0
+
+
+@pytest.mark.parametrize("kind", ["random", "cluster"])
+def test_continuous_metrics_match_exact_forward(kind):
+    """M_a and M_l need no relaxation: the soft path routes the exact
+    formulas through the gradient-guarded primitives, whose forward
+    values are identical — at ANY temperature."""
+    pos, edges = make_family(kind)
+    exact = _exact(pos, edges)
+    batch = pos[None]
+    plan = _plan_for(batch, edges)
+    got = soft.soft_scores(plan, batch, edges, 0.5)
+    np.testing.assert_allclose(float(got.minimum_angle[0]),
+                               float(exact.minimum_angle), rtol=1e-5)
+    np.testing.assert_allclose(float(got.edge_length_variation[0]),
+                               float(exact.edge_length_variation), rtol=1e-5)
+
+
+def test_annealing_monotone_approach():
+    """Tightening the temperature must not move soft counts AWAY from
+    the exact integers (sanity of the width scaling)."""
+    pos, edges = make_family("random")
+    exact = _exact(pos, edges)
+    batch = pos[None]
+    plan = _plan_for(batch, edges)
+    errs = []
+    for t in (0.2, 0.02, 0.002):
+        got = soft.soft_scores(plan, batch, edges, t)
+        errs.append(abs(float(got.edge_crossing[0]))
+                    and abs(float(got.edge_crossing[0])
+                            - float(exact.edge_crossing)))
+    assert errs[0] >= errs[1] >= errs[2]
+
+
+# ---------------------------------------------------------------------------
+# degenerate layouts: finite values, finite gradients
+# ---------------------------------------------------------------------------
+
+def _loss_grad(plan, batch, edges, t=0.05, **valid):
+    fn = lambda p: jnp.sum(soft.soft_loss(plan, p, edges, t, **valid))
+    val, grad = jax.value_and_grad(fn)(jnp.asarray(batch, jnp.float32))
+    return np.asarray(val), np.asarray(grad)
+
+
+@pytest.mark.parametrize("kind", ["duplicate", "collinear"])
+def test_degenerate_families_finite_gradients(kind):
+    pos, edges = make_family(kind)
+    batch = pos[None]
+    plan = _plan_for(batch, edges)
+    val, grad = _loss_grad(plan, batch, edges)
+    assert np.isfinite(val), kind
+    assert np.all(np.isfinite(grad)), kind
+    # duplicates create real occlusion pressure: the gradient must
+    # actually push somewhere, not just be safely zero everywhere
+    if kind == "duplicate":
+        assert np.max(np.abs(grad)) > 0
+
+
+def test_zero_edges_finite_gradients():
+    """E=0 via the engine's degenerate contract: one masked edge row +
+    n_valid_edges=0.  Values defined, gradients finite (the occlusion
+    term still differentiates)."""
+    rng = np.random.default_rng(0)
+    batch = rng.uniform(0, 10, (2, 24, 2)).astype(np.float32)
+    edges = np.zeros((1, 2), np.int32)
+    plan = _plan_for(batch, edges)
+    val, grad = _loss_grad(plan, batch, edges,
+                           n_valid_vertices=np.int32(24),
+                           n_valid_edges=np.int32(0))
+    assert np.isfinite(val)
+    assert np.all(np.isfinite(grad))
+    s = soft.soft_scores(plan, batch, edges, 0.05,
+                         n_valid_vertices=np.int32(24),
+                         n_valid_edges=np.int32(0))
+    np.testing.assert_allclose(np.asarray(s.edge_crossing), 0.0, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(s.edge_length_variation), 0.0,
+                               atol=1e-6)
+
+
+def test_all_coincident_layout_finite():
+    """Every vertex at the same point — every distance, edge length and
+    angle is singular.  The guarded primitives must keep both the values
+    and the whole backward pass finite."""
+    batch = np.zeros((1, 16, 2), np.float32)
+    edges = np.array([[i, (i + 1) % 16] for i in range(16)], np.int32)
+    plan = _plan_for(batch, edges)
+    val, grad = _loss_grad(plan, batch, edges)
+    assert np.isfinite(val)
+    assert np.all(np.isfinite(grad))
+
+
+# ---------------------------------------------------------------------------
+# trace discipline + structure
+# ---------------------------------------------------------------------------
+
+def test_annealing_never_retraces():
+    """The counter-proof that temperature is traced data, not a static:
+    jit a step over soft_loss, sweep the temperature, ONE trace."""
+    pos, edges = make_family("random")
+    batch = np.stack([pos, pos + 0.25])
+    plan = _plan_for(batch, edges)
+    step = jax.jit(lambda p, t: jnp.sum(soft.soft_loss(plan, p, edges, t)))
+    before = soft.trace_count()
+    for t in (0.1, 0.05, 0.01, 0.002):
+        float(step(jnp.asarray(batch), jnp.asarray(t, jnp.float32)))
+    assert soft.trace_count() - before == 1
+
+
+def test_metric_subset_prunes_soft_fields():
+    pos, edges = make_family("random")
+    batch = pos[None]
+    plan = _plan_for(batch, edges, metrics=("edge_crossing",))
+    got = soft.soft_scores(plan, batch, edges, 0.05)
+    assert got.edge_crossing is not None
+    assert got.node_occlusion is None
+    assert got.minimum_angle is None
+    assert got.edge_crossing_angle is None
+    # and the loss only carries the surviving term
+    val, grad = _loss_grad(plan, batch, edges)
+    assert np.isfinite(val) and np.all(np.isfinite(grad))
+
+
+def test_soft_loss_tracks_exact_objective():
+    """With unit weights and a cold temperature, 5 - loss must rank
+    layouts the same way the exact normalized objective does (the search
+    driver's selection invariant)."""
+    from repro.search import batch_objectives
+    pos, edges = make_family("random")
+    rng = np.random.default_rng(1)
+    batch = np.stack([pos, pos + rng.normal(0, 8.0, pos.shape)
+                      .astype(np.float32)])
+    plan = _plan_for(batch, edges)
+    losses = np.asarray(soft.soft_loss(plan, batch, edges, 1e-4))
+    exact = Evaluator(EvalConfig(radius=RADIUS, n_strips=N_STRIPS)) \
+        .evaluate_batch(batch, edges)
+    obj = batch_objectives(exact)
+    assert (np.argsort(-obj) == np.argsort(losses)).all()
