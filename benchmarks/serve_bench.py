@@ -234,6 +234,95 @@ def overload_section(base, graphs, rng):
     return section
 
 
+STREAM_DRAG_N = 10000    # |V| of the dragged layout
+STREAM_DRAG_FRAMES = 50  # timed per-frame updates
+
+
+def stream_drag_section(base, rng):
+    """Price the incremental path in the interactive-drag regime: ONE
+    registered |V|=10k layout, one vertex dragged a small step per
+    frame (the ``session.update`` stream a layout editor generates).
+    Per-frame incremental latency vs a warm full re-evaluation of the
+    SAME session (plan cache hot, jit cache hot — the honest baseline:
+    what each frame would cost without the delta program).  The counter
+    proof rides along: every timed frame must take the delta path
+    (``delta_hits``) and perform zero cell builds / vertex sorts /
+    strip builds / reversal sweeps (docs/incremental.md)."""
+    from repro.core import grid as gridlib
+    from repro.launch.session import EvalSession
+
+    n = STREAM_DRAG_N
+    pos, edges = make_graph(n)
+    pos, edges = np.asarray(pos), np.asarray(edges)
+    # threshold 1.0: the gate certifies delta-path latency; threshold
+    # tuning is a separate policy (tests/test_incremental.py)
+    sess = EvalSession(base, update_dirty_threshold=1.0)
+    sess.register_layout("drag", pos, edges)
+    # drag an interior vertex: a bounding-box-extremal vertex would
+    # change the strip domain and legitimately fall back every frame
+    c = (pos.min(axis=0) + pos.max(axis=0)) / 2
+    v = int(np.argmin(((pos - c) ** 2).sum(axis=1)))
+    cur = np.array(pos, copy=True)
+
+    def drag_step():
+        return rng.normal(0, 0.2, 2).astype(np.float32)
+
+    # warm both paths: first update traces the delta program, first
+    # evaluate warms the full path's jit entry for the moved layout
+    tgt = cur[v] + drag_step()
+    sess.update("drag", [v], [tgt])
+    cur[v] = tgt
+    sess.evaluate(cur, edges)
+
+    before = dict(sess.stats)
+    gridlib.reset_call_counts()
+    frame_times = []
+    for _ in range(STREAM_DRAG_FRAMES):
+        tgt = cur[v] + drag_step()
+        t0 = time.perf_counter()
+        sess.update("drag", [v], [tgt])
+        frame_times.append(time.perf_counter() - t0)
+        cur[v] = tgt
+    counts = dict(gridlib.CALL_COUNTS)
+    after = dict(sess.stats)
+
+    full_times = []
+    for _ in range(5):
+        t0 = time.perf_counter()
+        sess.evaluate(cur, edges)
+        full_times.append(time.perf_counter() - t0)
+
+    update_p50 = float(np.median(frame_times)) * 1e3
+    update_p95 = float(np.percentile(frame_times, 95)) * 1e3
+    full_p50 = float(np.median(full_times)) * 1e3
+    delta_hits = after["delta_hits"] - before["delta_hits"]
+    fallbacks = after["delta_fallbacks"] - before["delta_fallbacks"]
+    section = {
+        "n_vertices": n, "n_edges": int(edges.shape[0]),
+        "frames": STREAM_DRAG_FRAMES,
+        "update_p50_ms": update_p50, "update_p95_ms": update_p95,
+        "full_reeval_p50_ms": full_p50,
+        "speedup": full_p50 / update_p50,
+        "delta_hits": delta_hits, "delta_fallbacks": fallbacks,
+        "build_counters": counts,
+    }
+    section["acceptance"] = {
+        "update_10x_faster_than_full_reeval":
+            section["speedup"] >= 10.0,
+        "every_frame_incremental": (delta_hits == STREAM_DRAG_FRAMES
+                                    and fallbacks == 0),
+        "zero_rebuild_work": all(counts[k] == 0 for k in
+                                 ("cell_builds", "vertex_sorts",
+                                  "strip_builds", "reversal_sweeps")),
+    }
+    print(f"stream_drag |V|={n}: update {update_p50:.2f}/{update_p95:.2f} "
+          f"ms (p50/p95) vs full {full_p50:.2f} ms — "
+          f"{section['speedup']:.1f}x, {delta_hits}/{STREAM_DRAG_FRAMES} "
+          f"frames incremental")
+    print("stream_drag acceptance:", section["acceptance"])
+    return section
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--config", default="{}",
@@ -248,6 +337,11 @@ def main(argv=None):
                          "admission control: goodput and admitted-p95 "
                          "under 2x offered load) and merge it into "
                          "BENCH_serve.json")
+    ap.add_argument("--stream-drag-gate", action="store_true",
+                    help="run only the stream_drag section (the CI gate "
+                         "on incremental re-evaluation: per-frame "
+                         "session.update latency vs warm full re-eval "
+                         "at |V|=10k) and merge it into BENCH_serve.json")
     args = ap.parse_args(argv)
     overrides = json.loads(args.config)
     if "metrics" in overrides:
@@ -263,7 +357,7 @@ def main(argv=None):
     val_sizes = tuple(n for n in SIZES if n <= 1000) or SIZES[:1]
     val_graphs = {n: (np.asarray(p), np.asarray(e)) for n, (p, e) in
                   ((n, make_graph(n)) for n in val_sizes)}
-    if args.validation_gate or args.overload_gate:
+    if args.validation_gate or args.overload_gate or args.stream_drag_gate:
         sections = {}
         if args.validation_gate:
             sections["validation_overhead"] = validation_overhead(
@@ -271,6 +365,9 @@ def main(argv=None):
         if args.overload_gate:
             sections["overload"] = overload_section(
                 base, val_graphs, np.random.default_rng(2))
+        if args.stream_drag_gate:
+            sections["stream_drag"] = stream_drag_section(
+                base, np.random.default_rng(3))
         prior = {}
         if os.path.exists(out):
             with open(out) as f:
@@ -355,6 +452,8 @@ def main(argv=None):
         base, val_graphs, np.random.default_rng(1))
     results["overload"] = overload_section(
         base, val_graphs, np.random.default_rng(2))
+    results["stream_drag"] = stream_drag_section(
+        base, np.random.default_rng(3))
 
     by_size = {r["n_vertices"]: r for r in results["sizes"]}
     results["acceptance"] = {
@@ -366,6 +465,8 @@ def main(argv=None):
         **results["validation_overhead"]["acceptance"],
         **{f"overload_{k}": v
            for k, v in results["overload"]["acceptance"].items()},
+        **{f"stream_drag_{k}": v
+           for k, v in results["stream_drag"]["acceptance"].items()},
     }
     with open(out, "w") as f:
         json.dump(results, f, indent=2)

@@ -98,6 +98,11 @@ class Evaluator:
       (:func:`repro.distributed.batched.evaluate_layouts_sharded`;
       ``EvalConfig.shards`` bounds the device count) with integer
       metrics bit-identical to the single-host batched program.
+    * :meth:`register_layout` / :meth:`update` — dynamic layouts: score
+      once, then re-score small vertex moves incrementally (session
+      backends dirty only the grid cells/strips whose membership
+      changed — :mod:`repro.core.incremental`; integer metrics stay
+      bit-identical to a from-scratch evaluation).
     * :meth:`search` — gradient-guided layout *generation*: descend the
       differentiable relaxations (:mod:`repro.core.soft`) of this
       config's metrics with AdamW from a seed layout, B parallel
@@ -110,14 +115,21 @@ class Evaluator:
 
     def __init__(self, config: EvalConfig = None, *, mesh=None,
                  cache_size: int = 128, vertex_floor: int = 128,
-                 edge_floor: int = 128, max_coalesce: int = 32):
+                 edge_floor: int = 128, max_coalesce: int = 32,
+                 update_dirty_threshold: float = 0.25):
         self.config = config if config is not None else EvalConfig()
         self.mesh = mesh
         self._session = None
         self._session_knobs = dict(cache_size=cache_size,
                                    vertex_floor=vertex_floor,
                                    edge_floor=edge_floor,
-                                   max_coalesce=max_coalesce)
+                                   max_coalesce=max_coalesce,
+                                   update_dirty_threshold=update_dirty_threshold)
+        # dynamic layouts on the non-session backends (eager /
+        # distributed): (pos, edges) per layout_id, full re-eval per
+        # update — the incremental path needs the session's resident
+        # state (see repro.core.incremental)
+        self._layouts = {}
 
     def __repr__(self):
         return f"Evaluator({self.config!r})"
@@ -206,6 +218,62 @@ class Evaluator:
                                    **valid)
         scores = scores_from_result(res, n_v, n_e)
         return scores if flags is None else scores._replace(flags=flags)
+
+    # -- dynamic layouts (incremental re-evaluation) ------------------------
+
+    def register_layout(self, layout_id, pos, edges) -> ReadabilityScores:
+        """Register a dynamic layout for :meth:`update` streams.
+
+        Validates and fully evaluates ``pos`` once, returning its
+        scores.  On the session backends (``"fused"``, ``"kernels"``,
+        ``"graph_sharded"``) the bound :class:`EvalSession` also primes
+        device-resident per-cell/per-strip partials
+        (:mod:`repro.core.incremental`) so subsequent updates re-touch
+        only dirty grid cells and strips; on ``"eager"`` /
+        ``"distributed"`` the layout is tracked host-side and every
+        update is a documented full re-evaluation."""
+        backend = self.config.backend
+        if backend in ("fused", "kernels", "graph_sharded"):
+            return self._bound_session().register_layout(layout_id, pos, edges)
+        import numpy as np
+        scores = self.evaluate(pos, edges)
+        self._layouts[layout_id] = (np.array(pos, np.float32, copy=True),
+                                    np.array(edges, np.int32, copy=True))
+        return scores
+
+    def update(self, layout_id, moved_idx, new_pos) -> ReadabilityScores:
+        """Move ``moved_idx`` of a registered layout to ``new_pos`` and
+        re-score.
+
+        Session backends route through
+        :meth:`repro.launch.session.EvalSession.update` — incremental
+        when the dirty set is small (integer metrics bit-identical to a
+        from-scratch evaluation; ``scores.flags["incremental"]``
+        certifies the path taken), full re-eval otherwise.  The eager
+        and distributed backends always re-evaluate in full."""
+        backend = self.config.backend
+        if backend in ("fused", "kernels", "graph_sharded"):
+            return self._bound_session().update(layout_id, moved_idx, new_pos)
+        import numpy as np
+        if layout_id not in self._layouts:
+            raise KeyError(f"unknown layout_id {layout_id!r}; "
+                           "register_layout() first")
+        pos, edges = self._layouts[layout_id]
+        moved = np.asarray(moved_idx, np.int64).reshape(-1)
+        new_xy = np.asarray(new_pos, np.float32).reshape(-1, 2)
+        if moved.size == 0 or moved.size != new_xy.shape[0]:
+            raise InvalidInputError(
+                "update wants matching non-empty moved_idx / new_pos; "
+                f"got {moved.size} indices, {new_xy.shape[0]} positions")
+        if self.config.validation != "off":
+            if moved.min(initial=0) < 0 or \
+                    moved.max(initial=-1) >= pos.shape[0]:
+                raise InvalidInputError(
+                    f"moved_idx out of range for {pos.shape[0]} vertices")
+            if not np.isfinite(new_xy).all():
+                raise InvalidInputError("non-finite new_pos in update")
+        pos[moved] = new_xy
+        return self.evaluate(pos, edges)
 
     def evaluate_batch(self, batch_pos, edges, *,
                        plan: engine.ReadabilityPlan = None

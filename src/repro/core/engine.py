@@ -171,6 +171,15 @@ class ReadabilityPlan:
     # single-host plans.  Hashable plan data, so a mesh-size change is a
     # retrace, never a silent reuse of another mesh's program.
     graph_shard: tuple = None
+    # resident-partials metadata for the incremental path
+    # (:mod:`repro.core.incremental`): ``("delta", deg_cap)`` with
+    # ``deg_cap`` the static per-vertex incidence capacity of the
+    # resident min-angle state.  None (the default) on plans that never
+    # primed a resident state; replans rebuild from scratch with
+    # ``resident=None``, so a replanned layout simply re-primes.
+    # Hashable plan data — ``prime_state``/``evaluate_delta`` jit-key
+    # on the plan, so a capacity change retraces.
+    resident: tuple = None
 
     @property
     def orientation(self) -> str:

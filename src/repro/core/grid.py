@@ -102,6 +102,10 @@ class StripSegments(NamedTuple):
     u: jax.Array        # (S,) int32
     valid: jax.Array    # (S,) bool
     overflow: jax.Array  # () int32 segments dropped by max_segments budget
+    # parent edge id per segment slot (clipped to [0, E-1]; meaningful
+    # only where ``valid``) — the incremental path keys its per-strip
+    # dirty-set staleness checks on this
+    eid: jax.Array = None  # (S,) int32
 
 
 class GraphShardSpec(NamedTuple):
@@ -394,6 +398,7 @@ def build_strip_segments(pos: jax.Array, edges: jax.Array, n_strips: int,
         v=edges[eid, 0], u=edges[eid, 1],
         valid=valid,
         overflow=jnp.maximum(total - max_segments, 0).astype(jnp.int32),
+        eid=eid,
     )
 
 
@@ -484,6 +489,7 @@ def build_strip_segments_batched(pos: jax.Array, edges: jax.Array,
         v=edges[eid, 0], u=edges[eid, 1],
         valid=valid,
         overflow=jnp.maximum(total[:, 0] - max_segments, 0).astype(jnp.int32),
+        eid=eid,
     )
 
 

@@ -32,6 +32,7 @@ from __future__ import annotations
 
 import dataclasses
 import hashlib
+import threading
 import warnings
 from typing import Optional
 
@@ -259,6 +260,11 @@ class EvalConfig:
 # ---------------------------------------------------------------------------
 
 _WARNED: set = set()
+# warn_once is called from watchdog worker threads too (any shim entry
+# point reached under a guarded dispatch), and an unlocked check-then-add
+# lets two threads both pass the membership test and warn twice — or race
+# a concurrent reset_deprecation_warnings() in tests
+_WARNED_LOCK = threading.Lock()
 
 
 def warn_once(key: str, message: str, *, stacklevel: int = 3) -> None:
@@ -266,13 +272,16 @@ def warn_once(key: str, message: str, *, stacklevel: int = 3) -> None:
 
     The shims (``evaluate_layout``, ``EvalSession(**kwargs)``,
     ``ReadabilityServer(method=...)``) all warn through here so steady
-    traffic through old call sites logs one line, not millions."""
-    if key in _WARNED:
-        return
-    _WARNED.add(key)
+    traffic through old call sites logs one line, not millions.
+    Thread-safe: the check-and-add is atomic under ``_WARNED_LOCK``."""
+    with _WARNED_LOCK:
+        if key in _WARNED:
+            return
+        _WARNED.add(key)
     warnings.warn(message, DeprecationWarning, stacklevel=stacklevel)
 
 
 def reset_deprecation_warnings() -> None:
     """Forget which shims already warned (test hook)."""
-    _WARNED.clear()
+    with _WARNED_LOCK:
+        _WARNED.clear()

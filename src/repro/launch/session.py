@@ -120,12 +120,14 @@ deprecation shim mapping onto :class:`~repro.core.keys.EvalConfig`.
 
 from __future__ import annotations
 
+import dataclasses
 import threading
-from collections import OrderedDict
+from collections import Counter, OrderedDict
 
 import numpy as np
 
 from repro.core import engine
+from repro.core import incremental
 from repro.core.keys import (EvalConfig, pow2_bucket, pow2_chunks,
                              topology_hash, warn_once)
 from repro.core.scores import (error_scores, scores_from_batch,
@@ -150,7 +152,8 @@ _pow2_chunks = pow2_chunks
 _SESSION_KNOBS = ("cache_size", "vertex_floor", "edge_floor", "max_coalesce",
                   "max_replan_retries", "replan_growth", "growth_ceiling",
                   "max_queue", "max_queue_cost", "default_deadline",
-                  "dispatch_timeout", "probe_interval")
+                  "dispatch_timeout", "probe_interval",
+                  "update_dirty_threshold")
 
 
 class PlanCache:
@@ -162,33 +165,77 @@ class PlanCache:
     values are hashable frozen plans, which the jitted evaluators take
     as static arguments — a cache hit therefore implies a jit cache hit
     for any request shape already traced.
+
+    Thread-safe: every access (lookup, LRU reorder, counter bump,
+    eviction) happens under one lock — watchdog worker threads and a UI
+    thread driving ``session.update`` hit the cache concurrently, and an
+    unsynchronized ``move_to_end`` mid-``popitem`` corrupts the
+    ``OrderedDict``'s internal links.  Single-threaded behavior is
+    unchanged.
     """
 
     def __init__(self, capacity: int = 128):
         self.capacity = int(capacity)
         self._entries: OrderedDict = OrderedDict()
+        self._lock = threading.Lock()
         self.hits = 0
         self.misses = 0
         self.evictions = 0
 
     def __len__(self) -> int:
-        return len(self._entries)
+        with self._lock:
+            return len(self._entries)
 
     def get(self, key):
-        plan = self._entries.get(key)
-        if plan is None:
-            self.misses += 1
-            return None
-        self._entries.move_to_end(key)
-        self.hits += 1
-        return plan
+        with self._lock:
+            plan = self._entries.get(key)
+            if plan is None:
+                self.misses += 1
+                return None
+            self._entries.move_to_end(key)
+            self.hits += 1
+            return plan
 
     def put(self, key, plan) -> None:
-        self._entries[key] = plan
-        self._entries.move_to_end(key)
-        while len(self._entries) > self.capacity:
-            self._entries.popitem(last=False)
-            self.evictions += 1
+        with self._lock:
+            self._entries[key] = plan
+            self._entries.move_to_end(key)
+            while len(self._entries) > self.capacity:
+                self._entries.popitem(last=False)
+                self.evictions += 1
+
+
+class _BreakerBuffer:
+    """Write-buffering view of the session's breaker for watchdog
+    workers.
+
+    Reads (:meth:`allow` / :attr:`probing`) delegate to the live breaker
+    — the worker must see the real circuit state to pick a dispatch rung
+    — but the outcome records are buffered as replayable events so the
+    session can discard them wholesale when the watchdog abandons the
+    dispatch: a worker the session has already given up on must not
+    open, close, or half-open the circuit when it eventually finishes.
+    """
+
+    def __init__(self, breaker):
+        self._breaker = breaker
+        self.events = []
+
+    def allow(self):
+        return self._breaker.allow()
+
+    @property
+    def probing(self):
+        return self._breaker.probing
+
+    def record_success(self):
+        self.events.append("record_success")
+
+    def record_failure(self):
+        self.events.append("record_failure")
+
+    def record_fallback_success(self):
+        self.events.append("record_fallback_success")
 
 
 class EvalSession:
@@ -227,6 +274,7 @@ class EvalSession:
                  max_queue: int = None, max_queue_cost: int = None,
                  default_deadline: float = None,
                  dispatch_timeout: float = None, probe_interval: int = 8,
+                 update_dirty_threshold: float = 0.25,
                  mesh=None, **legacy_kwargs):
         if legacy_kwargs:
             if config is not None:
@@ -264,6 +312,16 @@ class EvalSession:
                                  else float(default_deadline))
         self.dispatch_timeout = (None if dispatch_timeout is None
                                  else float(dispatch_timeout))
+        # incremental updates: fall back to a full re-evaluation when a
+        # move dirties more than this fraction of the vertices, the grid
+        # cells, or either orientation's strips (past that point the
+        # delta program's dirty-row rebuild stops being cheaper than the
+        # full fused program)
+        self.update_dirty_threshold = float(update_dirty_threshold)
+        # registered dynamic layouts (session.update targets): host-side
+        # records + device-resident partials, guarded per layout
+        self._layouts = {}
+        self._layouts_lock = threading.Lock()
         # mesh is serving policy, not evaluation semantics: when set (and
         # multi-device), coalesced batches dispatch through the
         # batch-axis-sharded driver — results stay bit-identical on
@@ -274,6 +332,11 @@ class EvalSession:
         self.mesh = mesh
         self.breaker = CircuitBreaker(probe_interval)
         self.plans = PlanCache(cache_size)
+        # serializes watchdog abandonment against worker publication:
+        # a dispatch the watchdog gave up on must never merge its stats
+        # or breaker events into shared session state
+        self._publish_lock = threading.Lock()
+        self._last_abandoned_worker = None
         # traces counts engine traces triggered by this session (warmup
         # compiles land here; a steady-state delta of zero is the
         # "no retrace" certificate the serve benchmark asserts on)
@@ -285,6 +348,7 @@ class EvalSession:
             "chunk_splits": 0, "degraded_dispatches": 0, "saturated": 0,
             "shed": 0, "expired": 0, "cancelled": 0,
             "queue_high_watermark": 0, "watchdog_abandoned": 0,
+            "updates": 0, "delta_hits": 0, "delta_fallbacks": 0,
         }
 
     @property
@@ -372,7 +436,7 @@ class EvalSession:
 
     # -- dispatch -----------------------------------------------------------
 
-    def _dispatch(self, plan, chunk):
+    def _dispatch(self, plan, chunk, stats=None, breaker=None):
         """One engine dispatch for a same-key chunk -> list of scores.
 
         A sharded dispatch that fails (mesh lost / shard_map error —
@@ -382,15 +446,24 @@ class EvalSession:
         the difference except in the ``degraded_dispatches`` counter.
         While the breaker is open, each fused success feeds its
         half-open countdown; a half-open breaker makes the next
-        mesh-eligible dispatch the canary probe."""
+        mesh-eligible dispatch the canary probe.
+
+        ``stats``/``breaker`` default to the session's own; the watchdog
+        passes buffering stand-ins so an abandoned dispatch's writes can
+        be dropped instead of skewing shared state
+        (see :meth:`_guarded_dispatch`)."""
+        if stats is None:
+            stats = self._stats
+        if breaker is None:
+            breaker = self.breaker
         faults.check_dispatch()
         t0 = engine.trace_count()
-        self._stats["dispatches"] += 1
+        stats["dispatches"] += 1
         n_v = np.int32(chunk[0]["n_v"])
         n_e = np.int32(chunk[0]["n_e"])
         use_kernels = self.config.use_kernels
         if (self.config.backend == "graph_sharded" and self.mesh is not None
-                and self.breaker.allow()):
+                and breaker.allow()):
             # top rung: each layout spatially partitioned over the mesh
             # (a chunk dispatches one driver call per member — the graph
             # axis, not the batch axis, is what's sharded here).  Any
@@ -399,55 +472,55 @@ class EvalSession:
             from repro.distributed.graph_sharded import \
                 evaluate_graph_sharded
             try:
-                if self.breaker.probing:
+                if breaker.probing:
                     faults.check_probe()
                 faults.check_sharded()
                 results = [evaluate_graph_sharded(
                     self.mesh, plan, c["pos_p"], c["edges_p"],
                     n_valid_vertices=n_v, n_valid_edges=n_e)
                     for c in chunk]
-                self.breaker.record_success()
-                self._stats["graph_sharded_dispatches"] += len(chunk)
+                breaker.record_success()
+                stats["graph_sharded_dispatches"] += len(chunk)
                 if len(chunk) > 1:
-                    self._stats["coalesced"] += len(chunk)
+                    stats["coalesced"] += len(chunk)
                 reports = [scores_from_result(r, int(n_v), int(n_e))
                            for r in results]
-                self._stats["traces"] += engine.trace_count() - t0
+                stats["traces"] += engine.trace_count() - t0
                 return faults.storm_overflow(reports)
             except Exception:
-                self.breaker.record_failure()
-                self._stats["degraded_dispatches"] += 1
+                breaker.record_failure()
+                stats["degraded_dispatches"] += 1
         if len(chunk) == 1:
             res = engine.evaluate_planned(
                 plan, chunk[0]["pos_p"], chunk[0]["edges_p"], n_v, n_e,
                 use_kernels=use_kernels)
             reports = [scores_from_result(res, int(n_v), int(n_e))]
         else:
-            self._stats["coalesced"] += len(chunk)
+            stats["coalesced"] += len(chunk)
             batch = np.stack([c["pos_p"] for c in chunk])
             res = None
             if (self.mesh is not None and self.mesh.size > 1
-                    and not use_kernels and self.breaker.allow()):
+                    and not use_kernels and breaker.allow()):
                 # scale-out path: shard the coalesced batch axis over the
                 # mesh (the Pallas-kernel route stays single-device —
                 # its vmapped tiles are not shard_map-composed)
                 from repro.distributed.batched import \
                     evaluate_layouts_sharded
                 try:
-                    if self.breaker.probing:
+                    if breaker.probing:
                         faults.check_probe()
                     faults.check_sharded()
                     res = evaluate_layouts_sharded(
                         self.mesh, plan, batch, chunk[0]["edges_p"],
                         n_valid_vertices=n_v, n_valid_edges=n_e)
-                    self.breaker.record_success()
-                    self._stats["sharded_dispatches"] += 1
+                    breaker.record_success()
+                    stats["sharded_dispatches"] += 1
                 except Exception:
                     # one rung down the ladder: fused single-host (same
                     # batched body, bit-identical integer metrics); the
                     # breaker opens and re-probes on its own schedule
-                    self.breaker.record_failure()
-                    self._stats["degraded_dispatches"] += 1
+                    breaker.record_failure()
+                    stats["degraded_dispatches"] += 1
                     res = None
             if res is None:
                 res = engine.evaluate_layouts(
@@ -458,8 +531,8 @@ class EvalSession:
         if self.mesh is not None:
             # the fused rung served while a mesh exists: feed the
             # breaker's half-open countdown (no-op unless it is open)
-            self.breaker.record_fallback_success()
-        self._stats["traces"] += engine.trace_count() - t0
+            breaker.record_fallback_success()
+        stats["traces"] += engine.trace_count() - t0
         return faults.storm_overflow(reports)
 
     # -- the hung-dispatch watchdog ------------------------------------------
@@ -490,8 +563,14 @@ class EvalSession:
         chunk's slots pay while the queue keeps draining.
 
         An abandoned *real* dispatch may still complete on its worker
-        thread later and bump dispatch counters — the GIL makes the
-        increments safe, and the late result is dropped on the floor.
+        thread later — the session has by then failed the chunk's slots
+        and moved on, so the late completion must be a no-op on shared
+        state.  The worker therefore writes into a private stats buffer
+        and a :class:`_BreakerBuffer` and PUBLISHES them only if the
+        watchdog has not abandoned it (checked under ``_publish_lock``,
+        which the watchdog holds while marking the abandonment): a late
+        result can no longer skew ``stats()``/``health()``, flip the
+        breaker, or double-resolve slots.
         """
         timeout = self._chunk_timeout(chunk)
         if timeout is None:
@@ -503,20 +582,37 @@ class EvalSession:
                 elapsed=0.0)
         box = {}
         done = threading.Event()
+        abandoned = threading.Event()
 
         def work():
+            stats = Counter()
+            breaker = _BreakerBuffer(self.breaker)
             try:
-                box["reports"] = self._dispatch(plan, chunk)
+                box["reports"] = self._dispatch(plan, chunk, stats=stats,
+                                                breaker=breaker)
             except BaseException as err:
                 box["err"] = err
             finally:
+                # publish-or-drop: the abandonment check and the merge
+                # are atomic wrt the watchdog's abandonment mark
+                with self._publish_lock:
+                    if not abandoned.is_set():
+                        for k, v in stats.items():
+                            self._stats[k] += v
+                        for event in breaker.events:
+                            getattr(self.breaker, event)()
                 done.set()
 
         worker = threading.Thread(target=work, daemon=True,
                                   name="eval-session-dispatch")
         worker.start()
         if not done.wait(timeout):
+            with self._publish_lock:
+                abandoned.set()
             self._stats["watchdog_abandoned"] += 1
+            # test hook: the regression tests join the abandoned worker
+            # to prove its late completion publishes nothing
+            self._last_abandoned_worker = worker
             faults.release_hangs()
             raise DeadlineExceededError(
                 f"dispatch exceeded its {timeout:.3f}s wall-clock budget "
@@ -784,3 +880,213 @@ class EvalSession:
                 if remaining:
                     remaining = self._reap(remaining, out)
         return out
+
+    # -- dynamic layouts (incremental re-evaluation) --------------------------
+
+    def register_layout(self, layout_id, pos, edges):
+        """Register a dynamic layout for :meth:`update` and return its
+        full from-scratch scores.
+
+        The layout is evaluated through the normal serving path (plan
+        cache, validation, counters), then — on the ``"fused"`` backend
+        with a flat (untiered) plan — a device-resident partial state is
+        primed so subsequent small moves take the incremental path (see
+        :mod:`repro.core.incremental`).  Other backends register fine
+        but serve every update as a full re-evaluation."""
+        pos_v, edges_v, _ = validate_request(
+            pos, edges, mode=self.config.validation, index=0)
+        scores = self.evaluate(pos_v, edges_v)
+        pos_v = np.asarray(pos_v, np.float32)
+        edges_v = np.asarray(edges_v, np.int32)
+        n_v, n_e = pos_v.shape[0], edges_v.shape[0]
+        vb = pow2_bucket(n_v, self.vertex_floor)
+        eb = pow2_bucket(n_e, self.edge_floor)
+        pos_p = np.full((vb, 2), PARK, np.float32)
+        pos_p[:n_v] = pos_v
+        edges_p = np.zeros((eb, 2), np.int32)
+        edges_p[:n_e] = edges_v
+        lay = dict(key=(topology_hash(edges_v, n_v), vb, eb, self.config),
+                   pos=pos_v.copy(), edges=edges_v, pos_p=pos_p,
+                   edges_p=edges_p, n_v=n_v, n_e=n_e, vb=vb, eb=eb,
+                   lock=threading.Lock(), plan_r=None, state=None,
+                   vert_cell=None, strips=None)
+        self._prime_layout(lay)
+        with self._layouts_lock:
+            self._layouts[layout_id] = lay
+        return scores
+
+    def _prime_layout(self, lay) -> None:
+        """Build (or rebuild) the layout's device-resident partials.
+        Leaves ``state=None`` — meaning updates fall back to full
+        re-evaluation — when the backend is not the plain fused engine,
+        the plan is tiered, or the prime itself overflowed."""
+        lay["state"] = None
+        if self.config.backend != "fused":
+            return
+        plan = self._plan_for(lay["key"], lay)
+        if any(plan.strip_tiers):
+            # tiered strip layouts permute bucket offsets per occupancy;
+            # the resident tables assume the flat layout (sessions plan
+            # flat by default — this guards an explicit override)
+            return
+        inc_nbr, inc_deg, deg_cap = incremental.incidence_table(
+            lay["edges"], lay["n_v"], lay["vb"])
+        plan_r = dataclasses.replace(plan, resident=("delta", deg_cap))
+        state, aux = incremental.prime_state(
+            plan_r, lay["pos_p"], lay["edges_p"], lay["n_v"], lay["n_e"],
+            inc_nbr, inc_deg)
+        if aux["overflow"] > 0:
+            return
+        lay["plan_r"] = plan_r
+        lay["state"] = state
+        # host mirrors the delta planner reads/writes (device_get output
+        # can be read-only; the mirrors are mutated on commit)
+        lay["vert_cell"] = np.array(aux["vert_cell"])
+        lay["strips"] = [[np.array(s[0]), np.array(s[1]), s[2], s[3], s[4]]
+                         for s in aux["strips"]]
+
+    def update(self, layout_id, moved_idx, new_pos):
+        """Move a few vertices of a registered layout and re-score it.
+
+        Takes the incremental path when the resident state is live and
+        the move stays small (dirty fractions under
+        ``update_dirty_threshold``, strip domain unchanged, no bucket
+        overflow) — integer metrics are bit-identical to a from-scratch
+        evaluation either way, and incremental results carry
+        ``flags={"incremental": True}``.  Every other case counts a
+        ``delta_fallbacks`` and re-evaluates in full through the normal
+        serving path (then re-primes).  Raises ``KeyError`` for an
+        unknown ``layout_id`` and
+        :class:`~repro.core.validate.InvalidInputError` for bad indices
+        or non-finite coordinates (unless ``validation="off"``)."""
+        with self._layouts_lock:
+            lay = self._layouts.get(layout_id)
+        if lay is None:
+            raise KeyError(f"unknown layout_id {layout_id!r}; "
+                           "register_layout() it first")
+        moved = np.asarray(moved_idx, np.int64).ravel()
+        new = np.asarray(new_pos, np.float32).reshape(-1, 2)
+        if self.config.validation != "off":
+            if len(moved) == 0 or len(moved) != len(new):
+                raise InvalidInputError(
+                    f"moved_idx ({len(moved)}) and new_pos ({len(new)}) "
+                    "must be equal-length and non-empty",
+                    reason="bad_update")
+            if (moved < 0).any() or (moved >= lay["n_v"]).any():
+                raise InvalidInputError(
+                    "moved_idx out of range for a layout with "
+                    f"{lay['n_v']} vertices", reason="bad_update")
+            if not np.isfinite(new).all():
+                raise InvalidInputError(
+                    "new_pos contains non-finite coordinates",
+                    reason="bad_update")
+        with lay["lock"]:
+            self._stats["updates"] += 1
+            # duplicate indices: last write wins, like a sequential drag
+            uniq, ridx = np.unique(moved[::-1], return_index=True)
+            new_u = new[len(moved) - 1 - ridx]
+            scores = self._try_delta(lay, uniq, new_u)
+            if scores is not None:
+                self._stats["delta_hits"] += 1
+                flags = dict(scores.flags or {})
+                flags["incremental"] = True
+                return scores._replace(flags=flags)
+            # fallback: full re-evaluation through the serving path,
+            # then re-prime the resident state from the new positions
+            self._stats["delta_fallbacks"] += 1
+            lay["pos"][uniq] = new_u
+            lay["pos_p"][uniq] = new_u
+            scores = self.evaluate(lay["pos"], lay["edges"])
+            self._prime_layout(lay)
+            return scores
+
+    def _try_delta(self, lay, moved, new_xy):
+        """Attempt the incremental path; return host scores, or None to
+        fall back.  ``moved`` is sorted-unique with ``new_xy`` aligned."""
+        state, plan_r = lay["state"], lay["plan_r"]
+        if state is None:
+            return None
+        thr = self.update_dirty_threshold
+        n_v, n_e = lay["n_v"], lay["n_e"]
+        vb, eb = lay["vb"], lay["eb"]
+        if len(moved) > thr * n_v:
+            return None
+        moved_p = incremental.pad_ids(moved, vb)
+        new_xy_p = np.zeros((len(moved_p), 2), np.float32)
+        new_xy_p[:len(moved)] = new_xy
+        aff = incremental.affected_edges(lay["edges"], moved, n_v)
+        aff_p = incremental.pad_ids(aff, eb, floor=16)
+        probe = incremental.delta_probe(
+            plan_r, state, lay["edges_p"], n_e, moved_p, new_xy_p, aff_p)
+
+        dirty_strips, k = [], len(moved)
+        for axis_i, (lo2, hi2, sfn, sln, nsn) in enumerate(probe["axes"]):
+            sfo, slo, total, lo, hi = lay["strips"][axis_i]
+            if lo2 != lo or hi2 != hi:
+                # an extremal vertex moved: every strip boundary shifts
+                return None
+            ds, old_segs, new_segs = [], 0, 0
+            for j, e in enumerate(aff_p):
+                if e >= eb:
+                    continue
+                if slo[e] >= sfo[e]:
+                    ds.extend(range(int(sfo[e]), int(slo[e]) + 1))
+                    old_segs += int(slo[e]) - int(sfo[e]) + 1
+                if sln[j] >= sfn[j]:
+                    ds.extend(range(int(sfn[j]), int(sln[j]) + 1))
+                    new_segs += int(sln[j]) - int(sfn[j]) + 1
+            max_segments = plan_r.strip_plans[axis_i][0]
+            if total - old_segs + new_segs > max_segments:
+                return None          # the delta would outgrow the plan
+            ds = np.unique(np.asarray(ds, np.int64))
+            if len(ds) > thr * plan_r.n_strips:
+                return None
+            dirty_strips.append(
+                incremental.pad_ids(ds if len(ds) else [plan_r.n_strips],
+                                    plan_r.n_strips))
+
+        dc_p = own_p = np.zeros(0, np.int32)
+        if lay["vert_cell"] is not None and \
+                "node_occlusion" in plan_r.metrics:
+            n_cells = plan_r.grid_nx * plan_r.grid_ny
+            dirty = np.unique(np.concatenate(
+                [lay["vert_cell"][moved], probe["new_cid"][:k]]))
+            if len(dirty) > thr * n_cells:
+                return None
+            dc_p = incremental.pad_ids(dirty, n_cells)
+            own_p = incremental.pad_ids(
+                incremental.owner_cells(dirty, plan_r.grid_nx,
+                                        plan_r.grid_ny),
+                n_cells, floor=16)
+
+        dirty_ma = np.unique(np.concatenate(
+            [moved, lay["edges"][aff].reshape(-1).astype(np.int64)]))
+        dv_p = incremental.pad_ids(dirty_ma, vb, floor=16)
+
+        res, new_state = incremental.evaluate_delta(
+            plan_r, state, lay["edges_p"], n_e, moved_p, new_xy_p, aff_p,
+            dc_p, own_p, tuple(dirty_strips), dv_p)
+        scores = scores_from_result(res, n_v, n_e)
+        if scores.overflow > 0:
+            # bucket overflow or a dirty-set miss during the rebuild:
+            # membership equality is not guaranteed, so never commit
+            return None
+        # commit: device state + the host mirrors the next probe reads
+        lay["state"] = new_state
+        lay["pos"][moved] = new_xy
+        lay["pos_p"][moved] = new_xy
+        if lay["vert_cell"] is not None and \
+                "node_occlusion" in plan_r.metrics:
+            lay["vert_cell"][moved] = probe["new_cid"][:k]
+        for axis_i, (lo2, hi2, sfn, sln, nsn) in enumerate(probe["axes"]):
+            rec = lay["strips"][axis_i]
+            sfo, slo, total = rec[0], rec[1], rec[2]
+            live = aff_p < eb
+            old = np.where(slo[aff_p[live]] >= sfo[aff_p[live]],
+                           slo[aff_p[live]] - sfo[aff_p[live]] + 1, 0)
+            newn = np.where(sln[live] >= sfn[live],
+                            sln[live] - sfn[live] + 1, 0)
+            sfo[aff_p[live]] = sfn[live]
+            slo[aff_p[live]] = sln[live]
+            rec[2] = total - int(old.sum()) + int(newn.sum())
+        return scores

@@ -30,16 +30,19 @@ import os
 import subprocess
 import sys
 import threading
+import time
+import warnings
 
 import numpy as np
 import pytest
 
-from repro.core.keys import EvalConfig
+from repro.core.keys import (EvalConfig, reset_deprecation_warnings,
+                             warn_once)
 from repro.core.validate import (BackendUnavailableError, CapacityError,
-                                 InvalidInputError)
+                                 DeadlineExceededError, InvalidInputError)
 from repro.launch import faults
 from repro.launch.faults import FaultInjected, FaultPlan
-from repro.launch.session import EvalSession
+from repro.launch.session import EvalSession, PlanCache
 
 RADIUS = 2.0
 N_STRIPS = 48
@@ -134,6 +137,92 @@ def test_fault_plan_ordinals_are_thread_safe():
         assert fp._seen["dispatches"] == total
     assert fp.injected["fail_dispatches"] == len(fail_at)
     assert len(failures) == len(fail_at)
+
+
+def test_warn_once_is_thread_safe():
+    """N threads racing ``warn_once`` on the same keys issue exactly one
+    warning per key: the check-and-add is atomic under the module lock
+    (watchdog worker threads reach the shims too, and an unlocked
+    membership test lets two threads both pass it and warn twice)."""
+    reset_deprecation_warnings()
+    n_threads, per_thread = 8, 25
+    keys = [f"race-key-{i}" for i in range(4)]
+    start = threading.Barrier(n_threads)
+
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")     # dedup must come from warn_once
+
+        def worker():
+            start.wait()
+            for _ in range(per_thread):
+                for k in keys:
+                    warn_once(k, f"deprecated: {k}")
+
+        threads = [threading.Thread(target=worker)
+                   for _ in range(n_threads)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+
+    assert len(rec) == len(keys)
+    assert sorted(str(w.message) for w in rec) == \
+        sorted(f"deprecated: {k}" for k in keys)
+    # the reset hook re-arms every key (also under the lock)
+    reset_deprecation_warnings()
+    with warnings.catch_warnings(record=True) as rec2:
+        warnings.simplefilter("always")
+        warn_once(keys[0], "again")
+    assert len(rec2) == 1
+    reset_deprecation_warnings()
+
+
+def test_plan_cache_is_thread_safe():
+    # single-threaded contract first: miss/hit/LRU-evict accounting is
+    # unchanged by the locking
+    cache = PlanCache(capacity=2)
+    assert cache.get("a") is None and cache.misses == 1
+    cache.put("a", "plan_a")
+    cache.put("b", "plan_b")
+    assert cache.get("a") == "plan_a" and cache.hits == 1
+    cache.put("c", "plan_c")            # "b" is LRU now -> evicted
+    assert cache.get("b") is None
+    assert cache.evictions == 1
+    assert len(cache) == 2
+
+    # concurrent get/put storm over a deliberately overflowing key space:
+    # an unsynchronized move_to_end racing popitem corrupts the
+    # OrderedDict's links (raises KeyError/RuntimeError from inside it)
+    cache = PlanCache(capacity=8)
+    n_threads, per_thread, key_space = 8, 200, 16
+    start = threading.Barrier(n_threads)
+    errors = []
+
+    def worker(tid):
+        rng = np.random.default_rng(tid)
+        start.wait()
+        try:
+            for _ in range(per_thread):
+                key = int(rng.integers(0, key_space))
+                if cache.get(key) is None:
+                    cache.put(key, key * 10)
+        except Exception as err:        # pragma: no cover - failure path
+            errors.append(err)
+
+    threads = [threading.Thread(target=worker, args=(t,))
+               for t in range(n_threads)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+
+    assert errors == []
+    assert cache.hits + cache.misses == n_threads * per_thread
+    assert len(cache) <= 8
+    # surviving entries are intact key->value pairs, never torn
+    for k in range(key_space):
+        v = cache.get(k)
+        assert v is None or v == k * 10
 
 
 # ---------------------------------------------------------------------------
@@ -563,3 +652,67 @@ def test_breaker_self_heals_and_survives_rejected_probe():
     assert out["leg2"]["quarantined"] == 0
     assert out["leg2"]["state"] == "closed"
     assert all(out["same_rej"]) and all(out["same_heal"])
+
+
+# ---------------------------------------------------------------------------
+# abandoned-dispatch late completions are no-ops on shared state
+# ---------------------------------------------------------------------------
+
+def test_abandoned_dispatch_late_completion_publishes_nothing():
+    """An injected straggler outlives the watchdog budget, gets
+    abandoned, then COMPLETES the real dispatch on its discarded worker
+    thread — and that late completion must not skew a single shared
+    counter or breaker event (the publish-or-drop race this certifies
+    used to double-count ``dispatches``/``traces``)."""
+    pos, edges = graph()
+    session().evaluate(pos, edges)      # compile outside the guard
+    sess = session(dispatch_timeout=0.3)
+    sess.evaluate(pos, edges)                        # warm (jit cache hit)
+    with FaultPlan(slow_dispatches=0, slow_seconds=1.0) as fp:
+        out = sess.evaluate_batch([(pos, edges)])
+    assert fp.injected["slow_dispatches"] == 1
+    assert out[0].expired
+    assert isinstance(out[0].error, DeadlineExceededError)
+    assert sess.stats["watchdog_abandoned"] == 1
+
+    snapshot = sess.stats
+    worker = sess._last_abandoned_worker
+    assert worker is not None
+    worker.join(timeout=30.0)           # let the real dispatch finish late
+    assert not worker.is_alive()
+    # the late completion published nothing: counters and breaker state
+    # are bit-identical to the snapshot taken at abandonment
+    assert sess.stats == snapshot
+    # and the session still serves normally
+    assert sess.evaluate(pos, edges).ok
+
+
+def test_abandoned_hang_releases_late_and_stays_clean():
+    """The watchdog releases an injected hang at abandonment; the
+    discarded worker's FaultInjected must die with the worker — it never
+    reaches the split-and-retry path or the failure counters."""
+    pos, edges = graph()
+    session().evaluate(pos, edges)      # compile outside the guard
+    sess = session(dispatch_timeout=0.4)
+    sess.evaluate(pos, edges)
+    t0 = time.monotonic()
+    with FaultPlan(hang_dispatches=0) as fp:
+        out = sess.evaluate_batch([(pos, edges)])
+        assert fp.injected["hang_dispatches"] == 1
+        assert out[0].expired
+        worker = sess._last_abandoned_worker
+        assert worker is not None
+        snapshot = sess.stats
+        worker.join(timeout=10.0)       # release_hangs() already fired:
+        assert not worker.is_alive()    # the worker exits promptly...
+    assert time.monotonic() - t0 < 10.0  # ...not after the 20s hang bound
+    s = sess.stats
+    # the main thread's abandonment bookkeeping is all there is: one
+    # dispatch failure (the abandonment itself), one expired slot — the
+    # discarded worker's FaultInjected added nothing on top of it
+    assert s == snapshot
+    assert s["watchdog_abandoned"] == 1
+    assert s["dispatch_failures"] == 1
+    assert s["expired"] == 1
+    assert s["quarantined"] == 0
+    assert sess.evaluate(pos, edges).ok
